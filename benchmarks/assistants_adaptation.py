@@ -1,0 +1,69 @@
+"""Benchmark 2 (paper claim d, §3): scheduling-assistant adaptation.
+
+Scenarios: cost-model error (heterogeneous devices the compiler did not
+know about) and co-located interference. Metric: modeled step time before
+vs after the assistant protocol runs, + number of migrations.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.configs import get
+from repro.core import (AssistantConfig, CostModel, block_partition,
+                        build_graph, heterogeneous_devices,
+                        homogeneous_devices, modeled_step_time,
+                        run_adaptation)
+from repro.models.config import SHAPES
+
+SCENARIOS = {
+    # device speed factors the compiler did NOT model (plan assumes uniform)
+    "slow_dev0": [0.5] + [1.0] * 7,
+    "two_slow": [0.6, 1.0, 0.7] + [1.0] * 5,
+    # interference multipliers on busy time (paper §3 motivation)
+    "compute_interference": None,
+    "memory_interference": None,
+}
+
+
+def run(archs=("tinyllama-1.1b", "mixtral-8x7b", "recurrentgemma-2b")):
+    rows = []
+    for arch in archs:
+        cfg = get(arch)
+        g = build_graph(cfg, SHAPES["train_4k"])
+        plan_cm = CostModel(homogeneous_devices(8))
+        plan_cm.select_relocatable(g)
+        plan_cm.tag_nodes(g)
+        a0 = block_partition(g, plan_cm)
+
+        for scen, speeds in SCENARIOS.items():
+            if speeds is not None:
+                real_cm = CostModel(heterogeneous_devices(speeds))
+                interference = None
+            else:
+                real_cm = plan_cm
+                res = ("compute" if "compute" in scen else "memory")
+                interference = [{res: 2.5}, {}, {}, {}, {}, {}, {}, {}]
+            t_before = modeled_step_time(g, a0, real_cm, interference)
+            t0 = time.perf_counter()
+            trace = run_adaptation(
+                g, dict(a0), real_cm, interference=interference,
+                config=AssistantConfig(theta=0.9, gamma=0.6), max_steps=60)
+            us = (time.perf_counter() - t0) * 1e6
+            n_migs = sum(len(m) for m in trace.migrations)
+            rows.append({
+                "name": f"assistants/{arch}/{scen}",
+                "us_per_call": us,
+                "t_before_ms": t_before * 1e3,
+                "t_after_ms": trace.step_times[-1] * 1e3,
+                "improvement": 1 - trace.step_times[-1] / t_before,
+                "migrations": n_migs,
+            })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']:.0f},"
+              f"before={r['t_before_ms']:.1f}ms;after={r['t_after_ms']:.1f}ms;"
+              f"gain={r['improvement']:.1%};migs={r['migrations']}")

@@ -1,0 +1,49 @@
+"""Benchmark 4: render the §Roofline table from the dry-run JSON records
+(experiments/dryrun/*.json). Read-only; the dry-run populates the records."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DIR = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "experiments", "dryrun")
+
+
+def load(mesh: str = "singlepod") -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DIR, f"*__{mesh}.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def render(rows) -> str:
+    hdr = ("| arch | shape | t_comp ms | t_mem ms | t_coll ms | bottleneck | "
+           "useful | MFU@roof | fits |")
+    sep = "|" + "---|" * 9
+    out = [hdr, sep]
+    for r in rows:
+        if r.get("status") != "ok":
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']*1e3:.1f} "
+            f"| {r['t_memory_s']*1e3:.1f} | {r['t_collective_s']*1e3:.1f} "
+            f"| {r['bottleneck']} | {r['usefulness']:.2f} "
+            f"| {r['roofline_mfu']:.1%} | {'Y' if r.get('fits_hbm') else 'N'} |")
+    return "\n".join(out)
+
+
+def run():
+    rows = load()
+    return [{
+        "name": f"roofline/{r['arch']}/{r['shape']}",
+        "us_per_call": r.get("compile_s", 0) * 1e6,
+        "bottleneck": r.get("bottleneck"),
+        "mfu": r.get("roofline_mfu"),
+    } for r in rows if r.get("status") == "ok"]
+
+
+if __name__ == "__main__":
+    print(render(load()))

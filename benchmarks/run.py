@@ -1,0 +1,52 @@
+"""Benchmark driver: one function per paper claim/table.
+
+Prints ``name,us_per_call,derived`` CSV rows. The dry-run roofline table
+(benchmarks.roofline_table) renders from experiments/dryrun/*.json when
+present; run ``python -m repro.launch.dryrun --all`` first to populate it.
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (assistants_adaptation, partition_quality,
+                            pipeline_model, roofline_table)
+
+    print("name,us_per_call,derived")
+
+    rows = partition_quality.run()
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.0f},"
+              f"cut={r['cut_bytes']:.3e};imb={r['imbalance']:.3f};"
+              f"passes={r['passes']}")
+    for c in partition_quality.derived_claims(rows):
+        print(f"# {c}")
+
+    for r in assistants_adaptation.run():
+        print(f"{r['name']},{r['us_per_call']:.0f},"
+              f"before={r['t_before_ms']:.1f}ms;after={r['t_after_ms']:.1f}ms;"
+              f"gain={r['improvement']:.1%};migs={r['migrations']}")
+
+    for r in pipeline_model.run():
+        print(f"{r['name']},{r['us_per_call']:.0f},"
+              f"naive={r['t_naive_ms']:.1f}ms;plan={r['t_plan_ms']:.1f}ms;"
+              f"speedup={r['speedup']:.2f}x")
+
+    try:
+        rl = roofline_table.run()
+        if rl:
+            for r in rl:
+                print(f"{r['name']},{r['us_per_call']:.0f},"
+                      f"bottleneck={r['bottleneck']};mfu={r['mfu']:.2%}")
+        else:
+            print("# roofline: no dry-run records yet "
+                  "(run python -m repro.launch.dryrun --all)")
+    except Exception:
+        traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

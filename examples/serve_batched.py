@@ -1,0 +1,48 @@
+"""Batched serving example (deliverable b): greedy-decode a batch of
+requests against a reduced model with KV caches — covers global, sliding-
+window (mixtral), MLA latent (deepseek), and SSM-state (mamba2) cache kinds.
+
+    PYTHONPATH=src python examples/serve_batched.py --arch mixtral-8x7b
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get
+from repro.models import lm
+from repro.serve import Engine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get(args.arch).reduced()
+    key = jax.random.PRNGKey(0)
+    params = lm.init_params(cfg, key, jnp.float32)
+    eng = Engine(cfg, params, kv_len=args.prompt_len + args.max_new + 8)
+
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+    fe = (jax.random.normal(key, (args.batch, cfg.frontend_tokens,
+                                  cfg.frontend_dim), jnp.float32)
+          if cfg.frontend else None)
+
+    t0 = time.time()
+    out = eng.generate(prompts, max_new_tokens=args.max_new, frontend_emb=fe)
+    dt = time.time() - t0
+    print(f"[{args.arch}] {args.batch} requests x {args.max_new} new tokens "
+          f"in {dt:.2f}s ({args.batch*args.max_new/dt:.1f} tok/s)")
+    for i, row in enumerate(out.tolist()):
+        print(f"  req{i}: {row}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf-iteration driver: lower one (arch x shape) cell under a named
+variation and print/save its roofline row. Every EXPERIMENTS.md §Perf entry
+is reproducible as:
+
+    PYTHONPATH=src python experiments/hillclimb.py --arch minicpm-2b \
+        --shape train_4k --variant sp_attention --fsdp opt_only
+"""
+
+import argparse
+import json
+import time
+
+import jax
+
+from repro import configs
+from repro.launch.dryrun import lower_cell
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import SHAPES
+from repro.roofline import analyze
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--variant", required=True)
+    ap.add_argument("--fsdp", default="opt_only",
+                    choices=["true", "opt_only", "off"])
+    ap.add_argument("--no-seq-shard", action="store_true")
+    ap.add_argument("--grad-accum", type=int, default=0)
+    ap.add_argument("--no-unroll", action="store_true",
+                    help="memory-proof only (rolled compile)")
+    ap.add_argument("--out", default="experiments/perf")
+    args = ap.parse_args()
+
+    fsdp = {"true": True, "opt_only": "opt_only", "off": False}[args.fsdp]
+    cfg = configs.get(args.arch)
+    shape = SHAPES[args.shape]
+    mesh = make_production_mesh()
+    chips = mesh.devices.size
+
+    t0 = time.time()
+    rolled, _ = lower_cell(cfg, shape, mesh, fsdp=fsdp,
+                           seq_shard=not args.no_seq_shard,
+                           grad_accum=args.grad_accum, unroll=False)
+    mem = rolled.memory_analysis()
+    live = (mem.argument_size_in_bytes + mem.output_size_in_bytes +
+            mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+    row = {"arch": args.arch, "shape": args.shape, "variant": args.variant,
+           "live_bytes": int(live), "fits_hbm": bool(live < 16 * 2**30)}
+    if not args.no_unroll:
+        counted, _ = lower_cell(cfg, shape, mesh, fsdp=fsdp,
+                                seq_shard=not args.no_seq_shard,
+                                grad_accum=args.grad_accum, unroll=True)
+        roof = analyze(cfg, shape, "singlepod", chips, counted, args.arch)
+        row.update(roof.row())
+        row["variant"] = args.variant
+    row["compile_s"] = time.time() - t0
+
+    print(json.dumps(
+        {k: v for k, v in row.items() if k not in ("collectives", "mem")},
+        indent=1, default=str))
+    if "collectives" in row:
+        print("collectives:", row["collectives"])
+    os.makedirs(args.out, exist_ok=True)
+    with open(os.path.join(
+            args.out, f"{args.arch}__{args.shape}__{args.variant}.json"),
+            "w") as f:
+        json.dump(row, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Assigned architecture configs (exact public dims) + registry.
+
+Every config is importable as ``repro.configs.get("<arch-id>")`` and selectable
+on every launcher via ``--arch <id>``.
+"""
+
+from __future__ import annotations
+
+from repro.models.config import ModelConfig
+
+from . import (
+    tinyllama_1_1b,
+    command_r_35b,
+    minicpm_2b,
+    gemma2_9b,
+    phi_3_vision_4_2b,
+    mamba2_370m,
+    mixtral_8x7b,
+    deepseek_v2_lite_16b,
+    recurrentgemma_2b,
+    seamless_m4t_medium,
+    paper_mlp,
+)
+
+_REGISTRY: dict[str, ModelConfig] = {}
+for _mod in (
+    tinyllama_1_1b,
+    command_r_35b,
+    minicpm_2b,
+    gemma2_9b,
+    phi_3_vision_4_2b,
+    mamba2_370m,
+    mixtral_8x7b,
+    deepseek_v2_lite_16b,
+    recurrentgemma_2b,
+    seamless_m4t_medium,
+    paper_mlp,
+):
+    _REGISTRY[_mod.CONFIG.name] = _mod.CONFIG
+
+ARCH_IDS = tuple(k for k in _REGISTRY if k != "paper-mlp")
+
+
+def get(name: str) -> ModelConfig:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}") from None
+
+
+def available() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))

@@ -1,0 +1,22 @@
+"""The paper's own setting: a generic DNN dataflow graph.
+
+The 2019 paper predates the assigned LM zoo; its running example is "a large
+DNN trained with model parallelism on multi-GPU". We provide a small dense
+transformer as the paper's own end-to-end demo config (used by quickstart and
+the partitioner benchmarks at op granularity).
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="paper-mlp",
+    family="dense",
+    n_layers=8,
+    d_model=512,
+    n_heads=8,
+    n_kv_heads=8,
+    head_dim=64,
+    d_ff=2048,
+    vocab_size=32_000,
+    layer_cycle=(("global", "dense"),),
+)

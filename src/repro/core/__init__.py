@@ -1,0 +1,30 @@
+"""The paper's contribution: compiler-driven automatic model parallelism.
+
+Pipeline: ``graphgen.build_graph`` -> ``cost_model.CostModel`` ->
+``partitioner.partition`` -> ``planner.Plan`` -> launch-layer realization,
+with ``assistants`` providing the runtime adaptation of paper §3.
+"""
+
+from .graph import Graph, Node, Edge, TAG_COMPUTE, TAG_MEMORY, TAG_NETWORK
+from .cost_model import (CostModel, DeviceSpec, TPU_V5E,
+                         homogeneous_devices, heterogeneous_devices)
+from .partitioner import (block_partition, random_partition, partition,
+                          Refiner, RefineResult, cut_bytes, comm_score,
+                          balance_stats)
+from .assistants import (AssistantConfig, SchedulingAssistants, Migration,
+                         simulate_utilization, modeled_step_time,
+                         run_adaptation, AdaptationTrace)
+from .multilevel import multilevel_partition
+from .graphgen import build_graph
+from .planner import Plan, plan_model
+
+__all__ = [
+    "Graph", "Node", "Edge", "TAG_COMPUTE", "TAG_MEMORY", "TAG_NETWORK",
+    "CostModel", "DeviceSpec", "TPU_V5E", "homogeneous_devices",
+    "heterogeneous_devices", "block_partition", "random_partition",
+    "partition", "Refiner", "RefineResult", "cut_bytes", "comm_score",
+    "balance_stats", "AssistantConfig", "SchedulingAssistants", "Migration",
+    "simulate_utilization", "modeled_step_time", "run_adaptation",
+    "AdaptationTrace", "build_graph", "Plan", "plan_model",
+    "multilevel_partition",
+]

@@ -1,0 +1,216 @@
+"""Hardware scheduling assistants (paper §3) — software realization.
+
+The paper proposes hardware engines, programmed by the compiler, that migrate
+dataflow-graph nodes between devices at runtime using simple rules over
+resource-utilization counters:
+
+* node tags: compute-bound / memory-bound / network-bound (set by the compiler
+  — here ``CostModel.tag_nodes``),
+* when device D_i's utilization of resource R exceeds θ (default 95%), D_i
+  places one of its R-bound nodes into its *R out-box*,
+* a device whose utilization of R is below γ (default 50%) acquires a node
+  from another device's R out-box.
+
+TPUs expose no such hardware engine (DESIGN.md §2), so the assistant protocol
+runs in the launcher runtime: telemetry (real step timings on hardware; the
+analytical simulator below on CPU) feeds the same θ/γ/out-box rules, and an
+accepted migration triggers a re-lowering + state reshard between steps.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from .cost_model import CostModel
+from .graph import Graph, TAG_COMPUTE, TAG_MEMORY, TAG_NETWORK, TAGS
+
+
+@dataclass(frozen=True)
+class AssistantConfig:
+    theta: float = 0.95          # over-utilization threshold (paper: "say, 95%")
+    gamma: float = 0.50          # under-utilization threshold (paper: "say, 50%")
+    resources: tuple[str, ...] = TAGS
+    max_outbox: int = 1          # paper: "selects one of the ... nodes"
+
+
+RESOURCE_OF_TAG = {TAG_COMPUTE: "compute", TAG_MEMORY: "memory", TAG_NETWORK: "network"}
+TAG_OF_RESOURCE = {v: k for k, v in RESOURCE_OF_TAG.items()}
+
+
+# =============================================================================
+# Telemetry: analytical utilization simulator
+# =============================================================================
+
+def simulate_utilization(graph: Graph, assignment: dict[str, int],
+                         cost_model: CostModel,
+                         interference: Optional[list[dict[str, float]]] = None,
+                         ) -> list[dict[str, float]]:
+    """Per-device utilization of compute / memory / network in [0, 1].
+
+    Busy time per resource is derived from the cost model; utilization is busy
+    time over the step's critical path (slowest device). ``interference``
+    models co-located work (paper §3 motivation): a per-device multiplier that
+    inflates the device's busy time on a resource.
+    """
+    k = cost_model.k
+    busy = [dict(compute=0.0, memory=0.0, network=0.0) for _ in range(k)]
+    for nid, d in assignment.items():
+        node = graph.nodes[nid]
+        dev = cost_model.devices[d]
+        busy[d]["compute"] += node.flops / dev.eff_flops
+        busy[d]["memory"] += node.bytes_accessed / dev.eff_hbm
+    for e in graph.edges:
+        if assignment[e.src] != assignment[e.dst] and e.weight:
+            busy[assignment[e.src]]["network"] += e.weight / cost_model.devices[assignment[e.src]].link_bw
+            busy[assignment[e.dst]]["network"] += e.weight / cost_model.devices[assignment[e.dst]].link_bw
+    if interference:
+        for d in range(k):
+            for r, mult in interference[d].items():
+                busy[d][r] *= mult
+    step_time = max(max(b.values()) for b in busy) or 1.0
+    return [{r: min(1.0, b[r] / step_time) for r in b} for b in busy]
+
+
+def modeled_step_time(graph: Graph, assignment: dict[str, int],
+                      cost_model: CostModel,
+                      interference: Optional[list[dict[str, float]]] = None,
+                      ) -> float:
+    """Critical-path step time (s): max over devices of Σ resource busy time."""
+    k = cost_model.k
+    busy = [dict(compute=0.0, memory=0.0, network=0.0) for _ in range(k)]
+    for nid, d in assignment.items():
+        node = graph.nodes[nid]
+        dev = cost_model.devices[d]
+        busy[d]["compute"] += node.flops / dev.eff_flops
+        busy[d]["memory"] += node.bytes_accessed / dev.eff_hbm
+    for e in graph.edges:
+        if assignment[e.src] != assignment[e.dst] and e.weight:
+            busy[assignment[e.dst]]["network"] += e.weight / cost_model.devices[assignment[e.dst]].link_bw
+    if interference:
+        for d in range(k):
+            for r, mult in interference[d].items():
+                busy[d][r] *= mult
+    # compute and memory overlap within a device (roofline); network serializes
+    return max(max(b["compute"], b["memory"]) + b["network"] for b in busy)
+
+
+# =============================================================================
+# The assistant protocol
+# =============================================================================
+
+@dataclass
+class Migration:
+    node: str
+    src: int
+    dst: int
+    resource: str
+
+
+@dataclass
+class AssistantState:
+    # out_boxes[device][resource] -> node ids offered for migration
+    out_boxes: list[dict[str, list[str]]] = field(default_factory=list)
+
+
+class SchedulingAssistants:
+    """One assistant per device, executing the paper's θ/γ/out-box rules."""
+
+    def __init__(self, graph: Graph, cost_model: CostModel,
+                 config: AssistantConfig = AssistantConfig()):
+        self.g = graph
+        self.cm = cost_model
+        self.cfg = config
+        self.state = AssistantState(
+            out_boxes=[{r: [] for r in ("compute", "memory", "network")}
+                       for _ in range(cost_model.k)])
+
+    # -- rule 1: overloaded devices offer nodes -------------------------------
+    def _offer(self, assignment: dict[str, int],
+               utils: list[dict[str, float]]) -> None:
+        for d in range(self.cm.k):
+            for res in ("compute", "memory", "network"):
+                if utils[d][res] <= self.cfg.theta:
+                    continue
+                box = self.state.out_boxes[d][res]
+                if len(box) >= self.cfg.max_outbox:
+                    continue
+                tag = TAG_OF_RESOURCE[res]
+                # offer the costliest matching relocatable node on this device
+                cands = [nid for nid, dev in assignment.items()
+                         if dev == d and self.g.nodes[nid].relocatable
+                         and self.g.nodes[nid].tag == tag and nid not in box]
+                if cands:
+                    cands.sort(key=lambda nid: -self.g.nodes[nid].flops)
+                    box.append(cands[0])
+
+    # -- rule 2: underloaded devices acquire nodes ------------------------------
+    def _acquire(self, assignment: dict[str, int],
+                 utils: list[dict[str, float]]) -> list[Migration]:
+        migrations: list[Migration] = []
+        for d in range(self.cm.k):
+            for res in ("compute", "memory", "network"):
+                if utils[d][res] >= self.cfg.gamma:
+                    continue
+                # take from the most-utilized donor's out-box
+                donors = sorted(
+                    (q for q in range(self.cm.k)
+                     if q != d and self.state.out_boxes[q][res]),
+                    key=lambda q: -utils[q][res])
+                if not donors:
+                    continue
+                q = donors[0]
+                nid = self.state.out_boxes[q][res].pop(0)
+                if assignment.get(nid) != q:
+                    continue  # stale offer
+                assignment[nid] = d
+                migrations.append(Migration(nid, q, d, res))
+        return migrations
+
+    def step(self, assignment: dict[str, int],
+             utils: list[dict[str, float]]) -> list[Migration]:
+        """One assistant cycle: offers then acquisitions. Mutates assignment."""
+        self._offer(assignment, utils)
+        return self._acquire(assignment, utils)
+
+
+@dataclass
+class AdaptationTrace:
+    step_times: list[float]
+    migrations: list[list[Migration]]
+
+    @property
+    def improvement(self) -> float:
+        if not self.step_times:
+            return 0.0
+        return 1.0 - self.step_times[-1] / self.step_times[0]
+
+
+def run_adaptation(graph: Graph, assignment: dict[str, int],
+                   cost_model: CostModel,
+                   interference: Optional[list[dict[str, float]]] = None,
+                   config: AssistantConfig = AssistantConfig(),
+                   max_steps: int = 50,
+                   telemetry: Optional[Callable] = None) -> AdaptationTrace:
+    """Run assistant cycles until placement stabilizes (or max_steps).
+
+    Returns the modeled step-time trajectory — EXPERIMENTS.md uses it to show
+    the assistants recovering from cost-model error / interference (the
+    paper's §3 claim). ``telemetry`` may replace the analytical simulator
+    with measured utilizations on real hardware.
+    """
+    assignment = dict(assignment)
+    assistants = SchedulingAssistants(graph, cost_model, config)
+    telemetry = telemetry or (lambda a: simulate_utilization(
+        graph, a, cost_model, interference))
+    times = [modeled_step_time(graph, assignment, cost_model, interference)]
+    all_migrations: list[list[Migration]] = []
+    for _ in range(max_steps):
+        utils = telemetry(assignment)
+        migs = assistants.step(assignment, utils)
+        all_migrations.append(migs)
+        times.append(modeled_step_time(graph, assignment, cost_model, interference))
+        if not migs and not any(
+                any(box.values()) for box in assistants.state.out_boxes):
+            break
+    return AdaptationTrace(times, all_migrations)

@@ -1,0 +1,260 @@
+"""Realize a Plan on a TPU mesh: pytree -> PartitionSpec rules.
+
+``tensor`` backend (the roofline baseline): Megatron-style layout —
+attention heads / FFN hidden / experts / vocab on the ``model`` axis, batch
+on (``pod``, ``data``), sequence-parallel residual stream, optional FSDP
+("zero") sharding of params + optimizer state across ``data``.
+
+``pipeline`` backend (the paper-faithful realization): the ``model`` axis
+carries the partitioner's stages; specs here place each segment's stacked
+layer dim across stages (see ``repro.train.pipeline``).
+
+Rules are name-based over the param-tree paths emitted by ``repro.models``
+and check divisibility before sharding (fall back to replication), so every
+(arch x shape x mesh) combination lowers.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# leaf names whose LAST dim shards on the model axis (column parallel)
+_COL = {"wq", "wk", "wv", "w_gate", "w_up", "w_z", "w_xbc", "w_dt", "w_x",
+        "w_g", "wk_up", "wv_up", "unembed", "conv_w", "out_ln",
+        "A_log", "D", "dt_bias", "a_param"}
+# leaf names whose SECOND-TO-LAST dim shards on the model axis (row parallel)
+_ROW = {"wo", "w_down", "w_out", "w_rg", "w_ig"}
+# always replicated
+_REP = {"ln", "kv_ln", "final_norm", "enc_final_norm", "router", "wkv_down",
+        "frontend_proj", "enc_frontend", "step"}
+
+
+def _path_names(path) -> list[str]:
+    return [str(p.key) if hasattr(p, "key") else str(p.idx) for p in path]
+
+
+def _leaf_name(path) -> str:
+    return _path_names(path)[-1]
+
+
+def _divisible(dim: int, size: int) -> bool:
+    return size > 0 and dim % size == 0
+
+
+def _shardable_uneven(dim: int, size: int) -> bool:
+    """GSPMD pads uneven dims; profitable whenever dim >> size (vocab)."""
+    return size > 0 and dim >= 4 * size
+
+
+class ShardingRules:
+    """PartitionSpec factory bound to a mesh."""
+
+    def __init__(self, mesh: Mesh, *, model_axis: str = "model",
+                 data_axes: tuple[str, ...] = ("data",),
+                 fsdp: bool = False, seq_shard: bool = True,
+                 head_dim: int = 0):
+        self.head_dim = head_dim
+        self.mesh = mesh
+        self.model_axis = model_axis if model_axis in mesh.axis_names else None
+        self.data_axes = tuple(a for a in data_axes if a in mesh.axis_names)
+        self.fsdp = fsdp
+        self.seq_shard = seq_shard
+        ax = dict(zip(mesh.axis_names, mesh.devices.shape))
+        self.model_size = ax.get(model_axis, 1)
+        self.data_size = int(np.prod([ax[a] for a in self.data_axes])) \
+            if self.data_axes else 1
+
+    # -- params ------------------------------------------------------------------
+    def param_spec(self, path, leaf) -> P:
+        name = _leaf_name(path)
+        names = _path_names(path)
+        stacked = any(n.startswith("seg") for n in names) or "enc" in names[:1]
+        shape = leaf.shape
+        spec: list = [None] * len(shape)
+        nd = len(shape)
+
+        if name in _REP or nd == 0:
+            pass
+        elif name == "embed":  # [V_padded, D]: vocab-sharded (Megatron)
+            if self.model_axis and _divisible(shape[0], self.model_size):
+                spec[0] = self.model_axis
+            elif self.model_axis and _divisible(shape[1], self.model_size):
+                spec[1] = self.model_axis
+        elif "moe" in names and name in ("w_gate", "w_up", "w_down"):
+            # [.., E, D, F] / [.., E, F, D]
+            e_ax = nd - 3
+            if self.model_axis and _divisible(shape[e_ax], self.model_size):
+                spec[e_ax] = self.model_axis          # expert parallel
+            else:
+                f_ax = nd - 1 if name in ("w_gate", "w_up") else nd - 2
+                if self.model_axis and _divisible(shape[f_ax], self.model_size):
+                    spec[f_ax] = self.model_axis      # tensor parallel inside experts
+        elif name in ("wq", "wk", "wv") and nd >= 2:
+            # attention projections: shard out-dim only when it aligns with
+            # whole heads per shard (head_dim * heads/model); else replicate
+            # and let the sequence-parallel attention fallback carry TP.
+            if self.model_axis and self.head_dim and \
+                    _divisible(shape[-1], self.model_size) and \
+                    (shape[-1] // self.model_size) % self.head_dim == 0:
+                spec[-1] = self.model_axis
+        elif name in _COL and nd >= 1:
+            if self.model_axis and _divisible(shape[-1], self.model_size):
+                spec[-1] = self.model_axis
+        elif name in _ROW and nd >= 2:
+            if self.model_axis and _divisible(shape[-2], self.model_size):
+                spec[-2] = self.model_axis
+
+        # FSDP: shard one more free dim over data (params + opt state).
+        # fsdp="opt_only" (ZeRO-1) applies it to optimizer state only — no
+        # per-layer weight all-gathers on the forward/backward path.
+        if self.fsdp is True and self.data_axes and leaf.size >= (1 << 20):
+            start = 1 if stacked else 0
+            for ax in range(start, nd):
+                if spec[ax] is None and _divisible(shape[ax], self.data_size):
+                    spec[ax] = self.data_axes if len(self.data_axes) > 1 \
+                        else self.data_axes[0]
+                    break
+        return P(*spec)
+
+    def param_specs(self, params) -> dict:
+        return jax.tree_util.tree_map_with_path(
+            lambda p, x: self.param_spec(p, x), params)
+
+    def opt_specs(self, opt_state) -> dict:
+        def spec(p, x):
+            if _path_names(p)[0] not in ("m", "v"):
+                return P()
+            base = self.param_spec(p[1:], x)
+            if self.fsdp == "opt_only" and self.data_axes and \
+                    x.size >= (1 << 20):
+                lst = list(base) + [None] * (x.ndim - len(base))
+                names = _path_names(p[1:])
+                stacked = any(n.startswith("seg") for n in names) or \
+                    "enc" in names[:1]
+                for ax in range(1 if stacked else 0, x.ndim):
+                    if lst[ax] is None and _divisible(x.shape[ax],
+                                                      self.data_size):
+                        lst[ax] = (self.data_axes if len(self.data_axes) > 1
+                                   else self.data_axes[0])
+                        break
+                return P(*lst)
+            return base
+        return jax.tree_util.tree_map_with_path(spec, opt_state)
+
+    # -- data / activations --------------------------------------------------------
+    @property
+    def dp(self):
+        """Batch sharding axes (pod folded in when present)."""
+        axes = tuple(a for a in ("pod",) + tuple(self.data_axes)
+                     if a in self.mesh.axis_names)
+        return axes if axes else None
+
+    def _dp_if(self, batch: int):
+        if self.dp is None:
+            return None
+        size = int(np.prod([dict(zip(self.mesh.axis_names,
+                                     self.mesh.devices.shape))[a]
+                            for a in self.dp]))
+        return self.dp if batch % size == 0 else None
+
+    def batch_spec(self, batch_size: int, seq_len: int) -> dict:
+        dp = self._dp_if(batch_size)
+        return P(dp, None)
+
+    def seq_spec(self, batch_size: int) -> P:
+        """Residual stream [B, S, D]: batch over dp, seq over model (SP)."""
+        dp = self._dp_if(batch_size)
+        sp = self.model_axis if self.seq_shard else None
+        return P(dp, sp, None)
+
+    def cache_spec(self, path, leaf, batch_size: int) -> P:
+        name = _leaf_name(path)
+        dp = self._dp_if(batch_size)
+        nd = len(leaf.shape)
+        # stacked layer dim first: [R, B, ...]
+        if name in ("k", "v", "ckv", "krope"):        # [R, B, S, ...]
+            spec = [None, dp] + [None] * (nd - 2)
+            if self.model_axis and nd >= 3 and \
+                    _divisible(leaf.shape[2], self.model_size):
+                spec[2] = self.model_axis             # shard cache sequence
+            return P(*spec)
+        if name == "state" and nd >= 3:               # ssd [R,B,nh,hd,ns] / lru [R,B,w]
+            spec = [None, dp] + [None] * (nd - 2)
+            if self.model_axis and _divisible(leaf.shape[2], self.model_size):
+                spec[2] = self.model_axis
+            return P(*spec)
+        if name == "conv" and nd >= 3:                # [R,B,K-1,C]
+            spec = [None, dp] + [None] * (nd - 2)
+            if self.model_axis and _divisible(leaf.shape[-1], self.model_size):
+                spec[-1] = self.model_axis
+            return P(*spec)
+        if name == "pos":
+            return P(*([None] * nd))
+        return P(*([None, dp] + [None] * max(0, nd - 2)))
+
+    def cache_specs(self, cache, batch_size: int) -> dict:
+        return jax.tree_util.tree_map_with_path(
+            lambda p, x: self.cache_spec(p, x, batch_size), cache)
+
+    # -- convenience ------------------------------------------------------------
+    def named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    def tree_shardings(self, spec_tree):
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s), spec_tree,
+                            is_leaf=lambda s: isinstance(s, P))
+
+    def shard_fn(self, batch_size: int):
+        """Activation-constraint hook passed to ``models.lm.forward``."""
+        mesh = self.mesh
+        seq = self.seq_spec(batch_size)
+        dp = self._dp_if(batch_size)
+
+        def fn(x, kind: str):
+            if kind == "residual" and x.ndim == 3:
+                sp = seq
+                if not (self.seq_shard and self.model_axis and
+                        _divisible(x.shape[1], self.model_size)):
+                    sp = P(seq[0], None, None)  # decode / non-divisible seq
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, sp))
+            if kind == "pre_unembed" and x.ndim == 3:
+                # gather seq before the unembed matmul: keeps d_logits
+                # vocab-sharded in backward (h is 30x smaller than logits)
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, P(dp, None, None)))
+            if kind in ("heads", "q_heads") and x.ndim == 4:
+                # [B, S, H, hd] attention interior:
+                #  - heads divisible -> Megatron head sharding;
+                #  - else -> sequence-parallel attention (shard q seq over
+                #    model; flash-decoding-style softmax partials) — avoids
+                #    16x replicated attention for 36-head MHA etc.
+                if self.model_axis and _divisible(x.shape[2], self.model_size):
+                    sp = P(dp, None, self.model_axis, None)
+                elif self.model_axis and _divisible(x.shape[1], self.model_size):
+                    sp = P(dp, self.model_axis, None, None)
+                else:
+                    sp = P(dp, None, None, None)
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, sp))
+            if kind == "kv_heads" and x.ndim == 4:
+                # K/V: head-shard when divisible, else explicit full gather
+                # (keys/values are consumed by every q shard)
+                if self.model_axis and _divisible(x.shape[2], self.model_size):
+                    sp = P(dp, None, self.model_axis, None)
+                else:
+                    sp = P(dp, None, None, None)
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, sp))
+            if kind == "logits" and x.ndim == 3:
+                sp = P(dp, None, self.model_axis
+                       if self.model_axis and
+                       _divisible(x.shape[-1], self.model_size) else None)
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, sp))
+            return x
+        return fn

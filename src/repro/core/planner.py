@@ -1,0 +1,114 @@
+"""End-to-end planning: model config -> costed graph -> partition -> Plan.
+
+This is the paper's "DNN compiler" driver: it runs phases 1-4 (node selection,
+cost modeling, initial partitioning, iterative repartitioning) and emits a
+``Plan`` that the launch layer realizes on a TPU mesh — as pipeline stages
+(shard_map + ppermute; the faithful realization of device placement) or as a
+tensor-parallel layout (the beyond-paper baseline the roofline table uses).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.models.config import ModelConfig, ShapeConfig
+
+from .assistants import modeled_step_time
+from .cost_model import CostModel, DeviceSpec, TPU_V5E, homogeneous_devices
+from .graph import Graph
+from .graphgen import build_graph
+from .partitioner import RefineResult, balance_stats, cut_bytes, partition
+
+
+@dataclass
+class Plan:
+    cfg: ModelConfig
+    shape: ShapeConfig
+    k: int
+    backend: str                       # "tensor" | "pipeline"
+    assignment: dict[str, int]
+    layer_to_stage: list[int]          # decoder layer index -> stage
+    enc_layer_to_stage: list[int]      # encoder layer index -> stage
+    result: RefineResult
+    graph: Graph = field(repr=False, default=None)
+    cost_model: CostModel = field(repr=False, default=None)
+
+    @property
+    def cut_bytes(self) -> float:
+        return cut_bytes(self.graph, self.assignment)
+
+    @property
+    def step_time(self) -> float:
+        return modeled_step_time(self.graph, self.assignment, self.cost_model)
+
+    def balance(self) -> dict:
+        return balance_stats(self.graph, self.assignment, self.cost_model)
+
+    def stage_boundaries(self) -> list[int]:
+        """Layer indices at which a new stage starts (pipeline realization)."""
+        bounds = [0]
+        for i in range(1, len(self.layer_to_stage)):
+            if self.layer_to_stage[i] != self.layer_to_stage[i - 1]:
+                bounds.append(i)
+        return bounds
+
+    def describe(self) -> str:
+        b = self.balance()
+        return (f"Plan[{self.cfg.name} x {self.shape.name} k={self.k} "
+                f"{self.backend}] cut={self.cut_bytes:.3e}B "
+                f"imbalance={b['imbalance']:.3f} "
+                f"stages={self.stage_boundaries()} "
+                f"t_step={self.step_time*1e3:.2f}ms")
+
+
+def _layer_stage_table(graph: Graph, assignment: dict[str, int],
+                       cost_model: CostModel, n_layers: int,
+                       enc: bool = False) -> list[int]:
+    """Per-layer stage = cost-weighted majority of the layer's nodes,
+    then made monotone non-decreasing (pipeline stages must respect topology).
+    Encoder layers are numbered from 1000 in graphgen."""
+    base = 1000 if enc else 0
+    votes: list[dict[int, float]] = [dict() for _ in range(n_layers)]
+    for nid, dev in assignment.items():
+        node = graph.nodes[nid]
+        if node.layer is None:
+            continue
+        li = node.layer - base
+        if 0 <= li < n_layers:
+            votes[li][dev] = votes[li].get(dev, 0.0) + \
+                cost_model.node_cost(node, dev)
+    table = []
+    for li in range(n_layers):
+        stage = max(votes[li].items(), key=lambda kv: kv[1])[0] if votes[li] else 0
+        table.append(stage)
+    # monotone fix-up
+    for i in range(1, n_layers):
+        table[i] = max(table[i], table[i - 1])
+    return table
+
+
+def plan_model(cfg: ModelConfig, shape: ShapeConfig, k: int, *,
+               backend: str = "tensor", strategy: str = "block",
+               refine: bool = True, epsilon_frac: float = 0.10,
+               gain_mode: str = "paper", seed: int = 0,
+               device: DeviceSpec = TPU_V5E,
+               devices: Optional[list[DeviceSpec]] = None,
+               cost_mode: str = "roofline") -> Plan:
+    """Run the paper's compiler pipeline for one (arch x shape) cell."""
+    assert backend in ("tensor", "pipeline")
+    graph = build_graph(cfg, shape)
+    cm = CostModel(devices or homogeneous_devices(k, device), mode=cost_mode)
+    cm.select_relocatable(graph)            # phase 1
+    cm.tag_nodes(graph)                     # §3 tags for the assistants
+    res = partition(                        # phases 3-4
+        graph, cm, strategy=strategy, refine=refine,
+        epsilon_frac=epsilon_frac, gain_mode=gain_mode,
+        convex=(backend == "pipeline"), seed=seed)
+    table = _layer_stage_table(graph, res.assignment, cm, cfg.n_layers)
+    enc_table = _layer_stage_table(graph, res.assignment, cm,
+                                   cfg.n_enc_layers, enc=True)
+    return Plan(cfg=cfg, shape=shape, k=k, backend=backend,
+                assignment=res.assignment, layer_to_stage=table,
+                enc_layer_to_stage=enc_table, result=res,
+                graph=graph, cost_model=cm)

@@ -1,0 +1,40 @@
+"""Jit'd public wrapper for the flash-attention kernel.
+
+On TPU the Pallas kernel runs natively; elsewhere it runs in interpret mode
+(the kernel body executes on CPU — used by the correctness sweeps). Shapes
+that do not tile evenly fall back to the jnp oracle.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention_fwd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "logit_softcap",
+                                   "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, q_positions, k_positions, causal=True,
+                    window=0, logit_softcap=0.0, block_q=128, block_k=128,
+                    interpret=None):
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    bq, bk = min(block_q, Sq), min(block_k, Skv)
+    if Sq % bq or Skv % bk or H % k.shape[2]:
+        return ref.reference(q, k, v, q_positions=q_positions,
+                             k_positions=k_positions, causal=causal,
+                             window=window, logit_softcap=logit_softcap)
+    if interpret is None:
+        interpret = not _on_tpu()
+    return flash_attention_fwd(
+        q, k, v, q_positions, k_positions, causal=causal, window=window,
+        logit_softcap=logit_softcap, block_q=bq, block_k=bk,
+        interpret=interpret)

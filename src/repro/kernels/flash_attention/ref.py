@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the fused flash-attention kernel.
+
+Semantics match ``repro.models.blocks.attention(impl="naive")``: GQA,
+position-based causal + sliding-window masking, optional logit softcap,
+f32 softmax accumulation.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def reference(q, k, v, *, q_positions, k_positions, causal=True, window=0,
+              logit_softcap=0.0):
+    """q: [B, Sq, H, hd]; k, v: [B, Skv, KV, hd] -> [B, Sq, H, hd]."""
+    B, Sq, H, hd = q.shape
+    n_kv = k.shape[2]
+    if n_kv != H:
+        k = jnp.repeat(k, H // n_kv, axis=2)
+        v = jnp.repeat(v, H // n_kv, axis=2)
+    scale = 1.0 / math.sqrt(hd)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if logit_softcap:
+        scores = logit_softcap * jnp.tanh(scores / logit_softcap)
+    mask = k_positions[None, :] >= 0
+    if causal:
+        mask = mask & (k_positions[None, :] <= q_positions[:, None])
+    if window:
+        mask = mask & (k_positions[None, :] > q_positions[:, None] - window)
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)

@@ -1,0 +1,2 @@
+from .ops import rglru_scan
+from .ref import reference

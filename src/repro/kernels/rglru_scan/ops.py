@@ -1,0 +1,19 @@
+"""Jit'd public wrapper for the RG-LRU scan kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from . import ref
+from .rglru_scan import rglru_scan_fwd
+
+
+@partial(jax.jit, static_argnames=("block_w", "chunk", "interpret"))
+def rglru_scan(a, bx, *, block_w: int = 128, chunk: int = 256,
+               interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return rglru_scan_fwd(a, bx, block_w=block_w, chunk=chunk,
+                          interpret=interpret)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the RG-LRU linear-recurrence kernel:
+h_t = a_t * h_{t-1} + b_t (elementwise, per channel)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def reference(a, bx, h0=None):
+    """a, bx: [B, S, W] f32. Returns (hs [B, S, W], h_final [B, W])."""
+    if h0 is not None:
+        bx = bx.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    hs = lax.associative_scan(combine, (a, bx), axis=1)[1]
+    return hs, hs[:, -1]

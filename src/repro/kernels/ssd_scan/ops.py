@@ -1,0 +1,19 @@
+"""Jit'd public wrapper for the SSD scan kernel (interpret mode off-TPU)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from . import ref
+from .ssd_scan import ssd_scan_fwd
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(xs, dt, A, B_mat, C_mat, D, *, chunk: int = 256,
+             interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return ssd_scan_fwd(xs, dt, A, B_mat, C_mat, D, chunk=chunk,
+                        interpret=interpret)

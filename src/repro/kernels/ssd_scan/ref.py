@@ -1,0 +1,56 @@
+"""Pure-jnp oracle for the Mamba-2 SSD chunked scan kernel.
+
+Identical math to ``repro.models.ssm._ssd_chunked_core`` (kept standalone so
+the kernel tests do not depend on the model layer).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def reference(xs, dt, A, B_mat, C_mat, D, *, chunk: int = 64):
+    """xs: [B,S,nh,hd] f32; dt: [B,S,nh] (post-softplus); A: [nh] (negative);
+    B_mat/C_mat: [B,S,ns]; D: [nh]. Returns (y [B,S,nh,hd], state [B,nh,hd,ns])."""
+    Bb, S, nh, hd = xs.shape
+    ns = B_mat.shape[-1]
+    L = min(chunk, S)
+    while S % L:
+        L -= 1
+    N = S // L
+
+    xs_f = xs.astype(jnp.float32).reshape(Bb, N, L, nh, hd)
+    dt_c = dt.astype(jnp.float32).reshape(Bb, N, L, nh)
+    Bc = B_mat.astype(jnp.float32).reshape(Bb, N, L, ns)
+    Cc = C_mat.astype(jnp.float32).reshape(Bb, N, L, ns)
+
+    dA = dt_c * A
+    seg = jnp.cumsum(dA, axis=2)
+    total = seg[:, :, -1]
+
+    G = jnp.einsum("bnis,bnjs->bnij", Cc, Bc)
+    decay = jnp.exp(seg[:, :, :, None, :] - seg[:, :, None, :, :])
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    M = G[..., None] * jnp.where(mask[None, None, :, :, None], decay, 0.0) \
+        * dt_c[:, :, None, :, :]
+    y_intra = jnp.einsum("bnijh,bnjhp->bnihp", M, xs_f)
+
+    w = jnp.exp(total[:, :, None, :] - seg) * dt_c
+    states = jnp.einsum("bnjs,bnjh,bnjhp->bnhps", Bc, w, xs_f)
+
+    def step(h, inp):
+        s_n, tot_n = inp
+        h_prev = h
+        h = jnp.exp(tot_n)[:, :, None, None] * h + s_n
+        return h, h_prev
+
+    h0 = jnp.zeros((Bb, nh, hd, ns), jnp.float32)
+    final, h_prevs = lax.scan(step, h0, (states.swapaxes(0, 1),
+                                         total.swapaxes(0, 1)))
+    h_prevs = h_prevs.swapaxes(0, 1)
+
+    y_inter = jnp.einsum("bnis,bnih,bnhps->bnihp", Cc, jnp.exp(seg), h_prevs)
+    y = (y_intra + y_inter).reshape(Bb, S, nh, hd)
+    y = y + D[None, None, :, None] * xs.astype(jnp.float32)
+    return y, final

@@ -1,0 +1,74 @@
+"""ShapeDtypeStruct stand-ins for every model input/state — the dry-run
+lowers against these (weak-type-correct, shardable, zero allocation)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.optim import adamw
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Training/prefill batch inputs."""
+    B, S = shape.global_batch, shape.seq_len
+    out = {
+        "tokens": _sds((B, S), jnp.int32),
+        "labels": _sds((B, S), jnp.int32),
+    }
+    if cfg.frontend:
+        out["frontend_emb"] = _sds(
+            (B, cfg.frontend_tokens, cfg.frontend_dim), jnp.bfloat16)
+    if shape.kind != "train":
+        del out["labels"]
+    return out
+
+
+def param_specs(cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    """Abstract params via eval_shape (no allocation)."""
+    return jax.eval_shape(
+        lambda: lm.init_params(cfg, jax.random.PRNGKey(0), dtype))
+
+
+def opt_specs(params_abs) -> dict:
+    return jax.eval_shape(lambda: adamw.init_state(
+        jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), params_abs)))
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig,
+                dtype=jnp.bfloat16) -> dict:
+    B = shape.global_batch
+    F = cfg.frontend_tokens if (cfg.frontend and not cfg.n_enc_layers) else 0
+    return jax.eval_shape(
+        lambda: lm.init_cache(cfg, B, shape.seq_len + F, dtype))
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B = shape.global_batch
+    return {
+        "tokens": _sds((B, 1), jnp.int32),
+        "pos": _sds((), jnp.int32),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                dtype=jnp.bfloat16) -> dict:
+    """Everything the lowered step needs, keyed by role."""
+    out = {
+        "params": param_specs(cfg, dtype),
+        "batch": batch_specs(cfg, shape),
+    }
+    if shape.kind == "train":
+        out["opt_state"] = opt_specs(out["params"])
+        out["step"] = _sds((), jnp.int32)
+    if shape.kind in ("prefill", "decode"):
+        out["cache"] = cache_specs(cfg, shape, dtype)
+    if shape.kind == "decode":
+        out["decode"] = decode_specs(cfg, shape)
+    return out

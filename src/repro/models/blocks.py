@@ -1,0 +1,398 @@
+"""Shared model blocks: norms, RoPE, attention (GQA / local / softcap), FFN, MoE.
+
+All functions are pure; parameters are plain dicts of jnp arrays. Attention
+has three implementations:
+
+* ``naive``   — materializes [B, H, Sq, Skv] scores (small shapes, oracle),
+* ``chunked`` — query-chunked online-softmax (memory-efficient; the default —
+  it lowers on any backend and keeps dry-run memory realistic),
+* ``pallas``  — the fused TPU kernel in ``repro.kernels.flash_attention``
+  (interpret=True on CPU).
+
+Conventions: q/k/v are [B, S, H, hd]; caches store post-RoPE keys; decode is
+a single-token step with either a full-length cache (global attention) or a
+rolling window cache (local / SWA) addressed at ``pos % window``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ModelConfig
+
+DEFAULT_CHUNK = 1024
+
+
+# =============================================================================
+# initializers / norms / rope
+# =============================================================================
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm with f32 internals and LOW-PRECISION boundary cotangents.
+
+    The custom VJP keeps all math in f32 but returns d_x/d_scale in the
+    input dtypes: without it, XLA threads f32 cotangents of the residual
+    stream through every layer's collectives (2x wire + HBM bytes on the
+    command-r train cell — EXPERIMENTS.md §Perf it.6).
+    """
+    return _rms_fwd(x, scale, eps)[0]
+
+
+def _rms_fwd(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    rstd = lax.rsqrt(jnp.mean(jnp.square(xf), axis=-1, keepdims=True) + eps)
+    out = xf * rstd * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype), (x, scale, rstd)
+
+
+def _rms_bwd(eps, res, g):
+    x, scale, rstd = res
+    xf = x.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    sf = 1.0 + scale.astype(jnp.float32)
+    xhat = xf * rstd
+    d_scale = jnp.sum(gf * xhat, axis=tuple(range(g.ndim - 1)))
+    gx = gf * sf
+    d_x = rstd * (gx - xhat * jnp.mean(gx * xhat, axis=-1, keepdims=True))
+    return d_x.astype(x.dtype), d_scale.astype(scale.dtype)
+
+
+rms_norm.defvjp(lambda x, scale, eps: _rms_fwd(x, scale, eps),
+                _rms_bwd)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, hd]; positions: [S] or [B, S] absolute token positions."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    if angles.ndim == 2:                                # [S, hd/2] -> broadcast B
+        angles = angles[None]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# =============================================================================
+# attention core
+# =============================================================================
+
+def _expand_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """[B, S, KV, hd] -> [B, S, H, hd] by repeating each kv head H/KV times."""
+    n_kv = k.shape[2]
+    if n_kv == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // n_kv, axis=2)
+
+
+def _scores_mask(q_pos: jax.Array, k_pos: jax.Array, *, causal: bool,
+                 window: int) -> jax.Array:
+    """[Sq, Skv] boolean validity from absolute positions (k_pos may be -1 =
+    empty cache slot)."""
+    m = k_pos[None, :] >= 0
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window:
+        m &= k_pos[None, :] > q_pos[:, None] - window
+    return m
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              q_positions: jax.Array, k_positions: jax.Array,
+              causal: bool = True, window: int = 0,
+              logit_softcap: float = 0.0, impl: str = "chunked",
+              chunk: int = DEFAULT_CHUNK, unroll: bool = False) -> jax.Array:
+    """Softmax attention with GQA, optional sliding window and logit softcap.
+
+    q: [B, Sq, H, hd]; k, v: [B, Skv, KV, hd]. Positions are absolute.
+    """
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+        return fa_ops.flash_attention(
+            q, k, v, q_positions=q_positions, k_positions=k_positions,
+            causal=causal, window=window, logit_softcap=logit_softcap)
+
+    n_heads = q.shape[2]
+    k = _expand_kv(k, n_heads)
+    v = _expand_kv(v, n_heads)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+
+    if impl == "naive" or q.shape[1] <= chunk:
+        return _attn_block(q, k, v, q_positions, k_positions, scale,
+                           causal, window, logit_softcap)
+    assert impl == "chunked", impl
+    B, Sq, H, hd = q.shape
+    while Sq % chunk:  # largest chunk <= requested that divides Sq
+        chunk -= 1
+    n_chunks = Sq // chunk
+    qc = q.reshape(B, n_chunks, chunk, H, hd).swapaxes(0, 1)
+    pc = q_positions.reshape(n_chunks, chunk)
+
+    @jax.checkpoint  # recompute scores in backward: O(chunk) attention memory
+    def body(carry, xs):
+        q_i, p_i = xs
+        o = _attn_block(q_i, k, v, p_i, k_positions, scale, causal,
+                        window, logit_softcap)
+        return carry, o
+
+    _, out = lax.scan(body, None, (qc, pc),
+                      unroll=n_chunks if unroll else 1)
+    # NB: output head dim follows V, not Q (MLA: v_head_dim != qk head dim)
+    return out.swapaxes(0, 1).reshape(B, Sq, H, v.shape[-1])
+
+
+def _attn_block(q, k, v, q_pos, k_pos, scale, causal, window, cap):
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = softcap(scores, cap)
+    mask = _scores_mask(q_pos, k_pos, causal=causal, window=window)
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+# =============================================================================
+# attention layer (projections + cache handling)
+# =============================================================================
+
+def init_attention(key, cfg: ModelConfig, dtype, cross: bool = False) -> dict:
+    ks = jax.random.split(key, 5)
+    p = {
+        "ln": jnp.zeros((cfg.d_model,), dtype),
+        "wq": dense_init(ks[0], cfg.d_model, cfg.q_dim, dtype),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.kv_dim, dtype),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.kv_dim, dtype),
+        "wo": dense_init(ks[3], cfg.q_dim, cfg.d_model, dtype),
+    }
+    return p
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, kv_len: int, local: bool,
+                    dtype) -> dict:
+    size = min(kv_len, cfg.window_size) if (local and cfg.window_size) else kv_len
+    return {
+        "k": jnp.zeros((batch, size, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, size, cfg.n_kv_heads, cfg.head_dim), dtype),
+        # absolute position held by each slot; -1 = empty
+        "pos": jnp.full((size,), -1, jnp.int32),
+    }
+
+
+def attn_layer(cfg: ModelConfig, p: dict, x: jax.Array, *, local: bool,
+               positions: jax.Array, cache: Optional[dict] = None,
+               kv_override: Optional[tuple] = None, impl: str = "chunked",
+               unroll: bool = False,
+               shard_fn=None) -> tuple[jax.Array, Optional[dict]]:
+    """Pre-norm attention block. Returns (residual output, new cache).
+
+    Training/prefill: ``positions`` = [S]; decode: x is [B, 1, D] and
+    ``positions`` = [] scalar array of the current position; cache updated.
+    ``kv_override`` (k, v, k_positions) implements cross-attention.
+    """
+    B, S, _ = x.shape
+    window = cfg.window_size if local else 0
+    sf = shard_fn or (lambda a, kind: a)
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    q = sf((h @ p["wq"]).reshape(B, S, cfg.n_heads, cfg.head_dim), "q_heads")
+
+    if kv_override is not None:  # cross attention: kv precomputed from encoder
+        k, v, k_pos = kv_override
+        q_pos = positions.reshape(-1) if positions.ndim else positions[None]
+        o = attention(q, k, v, q_positions=q_pos, k_positions=k_pos,
+                      causal=False, window=0, impl=impl, unroll=unroll)
+        out = sf(o, "heads").reshape(B, S, cfg.q_dim) @ p["wo"]
+        return x + out, cache
+
+    k = sf((h @ p["wk"]).reshape(B, S, cfg.n_kv_heads, cfg.head_dim), "kv_heads")
+    v = sf((h @ p["wv"]).reshape(B, S, cfg.n_kv_heads, cfg.head_dim), "kv_heads")
+
+    if cache is None:  # training / prefill-without-cache
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        o = attention(q, k, v, q_positions=positions, k_positions=positions,
+                      causal=True, window=window,
+                      logit_softcap=cfg.attn_logit_softcap, impl=impl,
+                      unroll=unroll)
+        new_cache = None
+    elif S > 1:  # prefill WITH cache population
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        o = attention(q, k, v, q_positions=positions, k_positions=positions,
+                      causal=True, window=window,
+                      logit_softcap=cfg.attn_logit_softcap, impl=impl,
+                      unroll=unroll)
+        new_cache = _prefill_cache(cache, k, v, positions, window)
+    else:  # decode step
+        pos = positions.reshape(())  # scalar current position
+        q = apply_rope(q, pos[None], cfg.rope_theta)
+        k = apply_rope(k, pos[None], cfg.rope_theta)
+        size = cache["k"].shape[1]
+        slot = (pos % size) if window else jnp.minimum(pos, size - 1)
+        ck = lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+        cv = lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+        cpos = cache["pos"].at[slot].set(pos)
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+        o = attention(q, ck, cv, q_positions=pos[None],
+                      k_positions=cpos, causal=True, window=window,
+                      logit_softcap=cfg.attn_logit_softcap, impl=impl)
+
+    out = sf(o, "heads").reshape(B, S, cfg.q_dim) @ p["wo"]
+    return x + out, new_cache
+
+
+def _prefill_cache(cache: dict, k, v, positions, window: int) -> dict:
+    size = cache["k"].shape[1]
+    S = k.shape[1]
+    if not window or S <= size:
+        ck = lax.dynamic_update_slice(cache["k"], k[:, -size:], (0, 0, 0, 0))
+        cv = lax.dynamic_update_slice(cache["v"], v[:, -size:], (0, 0, 0, 0))
+        cpos = lax.dynamic_update_slice(cache["pos"],
+                                        positions[-size:].astype(jnp.int32), (0,))
+        return {"k": ck, "v": cv, "pos": cpos}
+    # rolling window: scatter last `size` tokens into pos % size slots
+    tail_k, tail_v = k[:, -size:], v[:, -size:]
+    tail_pos = positions[-size:]
+    slots = tail_pos % size
+    ck = cache["k"].at[:, slots].set(tail_k)
+    cv = cache["v"].at[:, slots].set(tail_v)
+    cpos = cache["pos"].at[slots].set(tail_pos)
+    return {"k": ck, "v": cv, "pos": cpos}
+
+
+# =============================================================================
+# FFN (SwiGLU / GeGLU) and MoE
+# =============================================================================
+
+def init_ffn(key, cfg: ModelConfig, dtype, d_ff: Optional[int] = None) -> dict:
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "ln": jnp.zeros((cfg.d_model,), dtype),
+        "w_gate": dense_init(ks[0], cfg.d_model, d_ff, dtype),
+        "w_up": dense_init(ks[1], cfg.d_model, d_ff, dtype),
+        "w_down": dense_init(ks[2], d_ff, cfg.d_model, dtype),
+    }
+
+
+def _act_fn(name: str):
+    return jax.nn.gelu if name == "gelu" else jax.nn.silu
+
+
+def ffn_layer(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    act = _act_fn(cfg.ffn_act)
+    out = (act(h @ p["w_gate"]) * (h @ p["w_up"])) @ p["w_down"]
+    return x + out
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> dict:
+    ks = jax.random.split(key, 5)
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.d_ff_expert
+    scale = 1.0 / math.sqrt(D)
+    p = {
+        "ln": jnp.zeros((D,), dtype),
+        "router": dense_init(ks[0], D, E, jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (E, D, F), jnp.float32) * scale).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (E, D, F), jnp.float32) * scale).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (E, F, D), jnp.float32) / math.sqrt(F)).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_ffn(ks[4], cfg, dtype,
+                               d_ff=cfg.n_shared_experts * cfg.d_ff_expert)
+        del p["shared"]["ln"]  # shares the MoE pre-norm
+    return p
+
+
+def moe_layer(cfg: ModelConfig, p: dict, x: jax.Array, *,
+              capacity_factor: float = 1.25, n_groups: int = 1,
+              lossless: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Capacity-bounded top-k MoE with grouped gather/scatter dispatch.
+
+    Tokens are split into ``n_groups`` dispatch groups (one per device shard
+    at run time — the launcher passes mesh size); capacity is per group, so
+    every intermediate is sharded along the group axis and nothing [T, E, C]-
+    sized ever materializes globally (TPU 'dropped' MoE; see DESIGN.md).
+
+    Returns (residual output, router aux loss).
+    """
+    B, S, D = x.shape
+    E, topk = cfg.n_experts, cfg.experts_per_token
+    T = B * S
+    G = n_groups if T % n_groups == 0 else 1
+    Tg = T // G
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    flat = h.reshape(G, Tg, D)
+
+    logits = flat.astype(jnp.float32) @ p["router"]            # [G, Tg, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = lax.top_k(probs, topk)               # [G, Tg, k]
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balancing loss (Switch-style), computed over all tokens
+    density = jnp.mean(jax.nn.one_hot(gate_idx[..., 0], E), axis=(0, 1))
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(density * mean_prob) * cfg.router_aux_coef
+
+    capacity = (Tg * topk if lossless
+                else max(1, int(Tg * topk * capacity_factor / E)))
+    # position of each (token, slot) within its expert, per group
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)      # [G, Tg, k, E]
+    flat_oh = onehot.reshape(G, Tg * topk, E)
+    pos_in_e = (jnp.cumsum(flat_oh, axis=1) - flat_oh).reshape(G, Tg, topk, E)
+    pos = jnp.take_along_axis(
+        pos_in_e, gate_idx[..., None], axis=-1)[..., 0]        # [G, Tg, k]
+    keep = pos < capacity
+
+    # scatter tokens into [G, E*C, D] (sentinel row E*C receives drops)
+    dest = jnp.where(keep, gate_idx * capacity + pos, E * capacity)
+    src = jnp.broadcast_to(flat[:, :, None, :], (G, Tg, topk, D)) \
+        .reshape(G, Tg * topk, D)
+    dispatched = jnp.zeros((G, E * capacity + 1, D), flat.dtype)
+    dispatched = jax.vmap(lambda d, i, s: d.at[i].set(s))(
+        dispatched, dest.reshape(G, Tg * topk), src)
+    dispatched = dispatched[:, :-1].reshape(G, E, capacity, D)
+
+    act = _act_fn(cfg.ffn_act)
+    hidden = act(jnp.einsum("gecd,edf->gecf", dispatched, p["w_gate"])) * \
+        jnp.einsum("gecd,edf->gecf", dispatched, p["w_up"])
+    expert_out = jnp.einsum("gecf,efd->gecd", hidden, p["w_down"])
+
+    # gather back and combine with gate weights
+    flat_out = expert_out.reshape(G, E * capacity, D)
+    flat_out = jnp.concatenate(
+        [flat_out, jnp.zeros((G, 1, D), flat_out.dtype)], axis=1)
+    gathered = jax.vmap(lambda f, i: f[i])(
+        flat_out, dest.reshape(G, Tg * topk)).reshape(G, Tg, topk, D)
+    combined = jnp.einsum("gtkd,gtk->gtd", gathered,
+                          gate_vals.astype(flat.dtype) * keep.astype(flat.dtype))
+
+    out = combined.reshape(B, S, D)
+    if "shared" in p:
+        sh = p["shared"]
+        out = out + (act(h @ sh["w_gate"]) * (h @ sh["w_up"])) @ sh["w_down"]
+    return x + out, aux

@@ -1,0 +1,323 @@
+"""Model assembly: params init + forward for every assigned architecture.
+
+One code path covers dense / MoE / SSM / hybrid decoder-only LMs, VLM
+(frontend-stub) variants, and the enc-dec (audio) family. Layers are grouped
+into scan segments (``ModelConfig.segments()``): XLA compiles one body per
+layer *class*, not per layer — critical for dry-run compile times at 42+
+layers and 512 devices.
+
+``forward(...)`` handles three modes:
+  train    — full-sequence teacher forcing, remat'd scan bodies, aux losses;
+  prefill  — full sequence, returns populated caches;
+  decode   — one token per sequence against the cache.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import blocks, mla as mla_mod, rglru as rglru_mod, ssm as ssm_mod
+from .blocks import rms_norm, softcap
+from .config import LayerSpec, ModelConfig, Segment
+
+
+# =============================================================================
+# init
+# =============================================================================
+
+def _init_layer(key, cfg: ModelConfig, spec: LayerSpec, dtype,
+                cross: bool, dense_ff: Optional[int] = None) -> dict:
+    ks = jax.random.split(key, 4)
+    p: dict = {}
+    if spec.mixer in ("global", "local"):
+        p["attn"] = blocks.init_attention(ks[0], cfg, dtype)
+    elif spec.mixer == "mla":
+        p["mla"] = mla_mod.init_mla(ks[0], cfg, dtype)
+    elif spec.mixer == "ssd":
+        p["ssd"] = ssm_mod.init_ssd(ks[0], cfg, dtype)
+    elif spec.mixer == "rglru":
+        p["rglru"] = rglru_mod.init_rglru(ks[0], cfg, dtype)
+    if cross:
+        p["xattn"] = blocks.init_attention(ks[1], cfg, dtype, cross=True)
+    if spec.ffn == "dense":
+        p["ffn"] = blocks.init_ffn(ks[2], cfg, dtype, d_ff=dense_ff or cfg.d_ff)
+    elif spec.ffn == "moe":
+        p["moe"] = blocks.init_moe(ks[2], cfg, dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.bfloat16) -> dict:
+    keys = jax.random.split(key, 8 + len(cfg.segments()))
+    params: dict = {
+        "embed": (jax.random.normal(keys[0], (cfg.padded_vocab, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = blocks.dense_init(keys[1], cfg.d_model,
+                                              cfg.padded_vocab, dtype)
+    if cfg.frontend and not cfg.n_enc_layers:
+        params["frontend_proj"] = blocks.dense_init(
+            keys[2], cfg.frontend_dim, cfg.d_model, dtype)
+
+    cross = bool(cfg.n_enc_layers)
+    for si, seg in enumerate(cfg.segments()):
+        seg_p = {}
+        for ci, spec in enumerate(seg.cycle):
+            lkeys = jax.random.split(jax.random.fold_in(keys[3], si * 16 + ci),
+                                     seg.repeats)
+            dense_ff = cfg.d_ff
+            seg_p[f"c{ci}"] = jax.vmap(
+                lambda k: _init_layer(k, cfg, spec, dtype, cross, dense_ff)
+            )(lkeys)
+        params[f"seg{si}"] = seg_p
+
+    if cfg.n_enc_layers:
+        params["enc_frontend"] = blocks.dense_init(
+            keys[4], cfg.frontend_dim, cfg.d_model, dtype)
+        ekeys = jax.random.split(keys[5], cfg.n_enc_layers)
+        espec = LayerSpec("global", "dense")
+        params["enc"] = jax.vmap(
+            lambda k: _init_layer(k, cfg, espec, dtype, cross=False)
+        )(ekeys)
+        params["enc_final_norm"] = jnp.zeros((cfg.d_model,), dtype)
+    return params
+
+
+def init_cache(cfg: ModelConfig, batch: int, kv_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    """Decode/prefill cache mirroring the segment structure of the params."""
+    def layer_cache(spec: LayerSpec) -> dict:
+        c: dict = {}
+        if spec.mixer in ("global", "local"):
+            c["attn"] = blocks.init_attn_cache(
+                cfg, batch, kv_len, local=(spec.mixer == "local"), dtype=dtype)
+        elif spec.mixer == "mla":
+            c["mla"] = mla_mod.init_mla_cache(cfg, batch, kv_len, dtype)
+        elif spec.mixer == "ssd":
+            c["ssd"] = ssm_mod.init_ssd_cache(cfg, batch, dtype)
+        elif spec.mixer == "rglru":
+            c["rglru"] = rglru_mod.init_rglru_cache(cfg, batch, dtype)
+        if cfg.n_enc_layers:
+            F = cfg.frontend_tokens
+            c["xattn"] = {
+                "k": jnp.zeros((batch, F, cfg.n_kv_heads, cfg.head_dim), dtype),
+                "v": jnp.zeros((batch, F, cfg.n_kv_heads, cfg.head_dim), dtype),
+            }
+        return c
+
+    cache: dict = {}
+    for si, seg in enumerate(cfg.segments()):
+        cache[f"seg{si}"] = {
+            f"c{ci}": jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (seg.repeats,) + x.shape).copy(),
+                layer_cache(spec))
+            for ci, spec in enumerate(seg.cycle)
+        }
+    return cache
+
+
+# =============================================================================
+# forward
+# =============================================================================
+
+def _apply_layer(cfg: ModelConfig, spec: LayerSpec, p: dict, h, *,
+                 positions, cache: Optional[dict], enc_out, impl: str,
+                 n_groups: int, capacity_factor: float = 1.25,
+                 moe_lossless: bool = False, unroll: bool = False,
+                 shard_fn=None):
+    """One layer. Returns (h, new_cache_or_None, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: dict = {}
+
+    if spec.mixer in ("global", "local"):
+        h, c = blocks.attn_layer(cfg, p["attn"], h,
+                                 local=(spec.mixer == "local"),
+                                 positions=positions,
+                                 cache=cache.get("attn") if cache else None,
+                                 impl=impl, unroll=unroll, shard_fn=shard_fn)
+        if c is not None:
+            new_cache["attn"] = c
+    elif spec.mixer == "mla":
+        h, c = mla_mod.mla_layer(cfg, p["mla"], h, positions=positions,
+                                 cache=cache.get("mla") if cache else None,
+                                 impl=impl, unroll=unroll, shard_fn=shard_fn)
+        if c is not None:
+            new_cache["mla"] = c
+    elif spec.mixer == "ssd":
+        h, c = ssm_mod.ssd_layer(cfg, p["ssd"], h,
+                                 cache=cache.get("ssd") if cache else None,
+                                 impl=impl)
+        if c is not None:
+            new_cache["ssd"] = c
+    elif spec.mixer == "rglru":
+        h, c = rglru_mod.rglru_layer(cfg, p["rglru"], h,
+                                     cache=cache.get("rglru") if cache else None)
+        if c is not None:
+            new_cache["rglru"] = c
+
+    if "xattn" in p:  # enc-dec cross attention
+        F = cfg.frontend_tokens
+        k_pos = jnp.arange(F, dtype=jnp.int32)
+        if enc_out is not None:  # train/prefill: project encoder output
+            xp = p["xattn"]
+            he = rms_norm(enc_out, xp["ln"], cfg.norm_eps)
+            B, Fs, _ = he.shape
+            xk = (he @ xp["wk"]).reshape(B, Fs, cfg.n_kv_heads, cfg.head_dim)
+            xv = (he @ xp["wv"]).reshape(B, Fs, cfg.n_kv_heads, cfg.head_dim)
+            if cache is not None:
+                new_cache["xattn"] = {"k": xk, "v": xv}
+        else:  # decode: cached cross kv
+            xk, xv = cache["xattn"]["k"], cache["xattn"]["v"]
+            if cache is not None:
+                new_cache["xattn"] = {"k": xk, "v": xv}
+        h, _ = blocks.attn_layer(cfg, p["xattn"], h, local=False,
+                                 positions=positions,
+                                 kv_override=(xk, xv, k_pos), impl=impl,
+                                 unroll=unroll, shard_fn=shard_fn)
+
+    if spec.ffn == "dense":
+        h = blocks.ffn_layer(cfg, p["ffn"], h)
+    elif spec.ffn == "moe":
+        h, a = blocks.moe_layer(cfg, p["moe"], h, n_groups=n_groups,
+                                capacity_factor=capacity_factor,
+                                lossless=moe_lossless)
+        aux = aux + a
+    return h, (new_cache if new_cache else None), aux
+
+
+def _run_segment(cfg: ModelConfig, seg: Segment, seg_p: dict, h, *,
+                 positions, seg_cache, enc_out, impl: str, n_groups: int,
+                 remat: bool, capacity_factor: float = 1.25,
+                 moe_lossless: bool = False, unroll: bool = False,
+                 shard_fn=None):
+    def body(carry, xs):
+        hh = carry
+        ps, cs = xs
+        new_cs: dict = {}
+        aux = jnp.zeros((), jnp.float32)
+        for ci, spec in enumerate(seg.cycle):
+            lc = cs[f"c{ci}"] if cs is not None else None
+            hh, nc, a = _apply_layer(cfg, spec, ps[f"c{ci}"], hh,
+                                     positions=positions, cache=lc,
+                                     enc_out=enc_out, impl=impl,
+                                     n_groups=n_groups,
+                                     capacity_factor=capacity_factor,
+                                     moe_lossless=moe_lossless,
+                                     unroll=unroll, shard_fn=shard_fn)
+            aux = aux + a
+            if nc is not None:
+                new_cs[f"c{ci}"] = nc
+        return hh, (new_cs if new_cs else None, aux)
+
+    if remat:
+        body = jax.checkpoint(body)
+    h, (new_caches, auxs) = lax.scan(body, h, (seg_p, seg_cache),
+                                     unroll=seg.repeats if unroll else 1)
+    return h, new_caches, jnp.sum(auxs)
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
+            positions: Optional[jax.Array] = None,
+            frontend_emb: Optional[jax.Array] = None,
+            cache: Optional[dict] = None,
+            mode: str = "train", impl: str = "chunked",
+            n_groups: int = 1, remat: Optional[bool] = None,
+            capacity_factor: float = 1.25,
+            moe_lossless: Optional[bool] = None,
+            shard_fn=None, unroll: bool = False):
+    """Returns (logits, new_cache_or_None, aux_loss).
+
+    tokens: [B, S] (decode: [B, 1]).
+    positions: [S] absolute positions (decode: scalar array). Defaults to
+      arange over the model sequence (frontend tokens first for VLM).
+    frontend_emb: [B, F, frontend_dim] stub embeddings (VLM/audio).
+    """
+    remat = (mode == "train") if remat is None else remat
+    decode = mode == "decode"
+    if moe_lossless is None:
+        moe_lossless = decode  # decode groups are tiny; avoid capacity drops
+    if shard_fn is None:
+        shard_fn = lambda x, kind: x
+    B, S = tokens.shape
+
+    # ---- encoder (enc-dec archs) -------------------------------------------
+    enc_out = None
+    if cfg.n_enc_layers and not decode:
+        assert frontend_emb is not None
+        he = frontend_emb.astype(params["enc_frontend"].dtype) @ params["enc_frontend"]
+        F = he.shape[1]
+        e_pos = jnp.arange(F, dtype=jnp.int32)
+
+        # bidirectional encoder layer (non-causal self-attention + FFN)
+        def enc_body2(carry, ps):
+            hh = carry
+            pa = ps["attn"]
+            hn = rms_norm(hh, pa["ln"], cfg.norm_eps)
+            q = (hn @ pa["wq"]).reshape(B, F, cfg.n_heads, cfg.head_dim)
+            k = (hn @ pa["wk"]).reshape(B, F, cfg.n_kv_heads, cfg.head_dim)
+            v = (hn @ pa["wv"]).reshape(B, F, cfg.n_kv_heads, cfg.head_dim)
+            q = blocks.apply_rope(q, e_pos, cfg.rope_theta)
+            k = blocks.apply_rope(k, e_pos, cfg.rope_theta)
+            o = blocks.attention(q, k, v, q_positions=e_pos, k_positions=e_pos,
+                                 causal=False, impl="chunked", unroll=unroll)
+            hh = hh + o.reshape(B, F, cfg.q_dim) @ pa["wo"]
+            hh = blocks.ffn_layer(cfg, ps["ffn"], hh)
+            return hh, None
+
+        enc_body2 = jax.checkpoint(enc_body2) if remat else enc_body2
+        he, _ = lax.scan(enc_body2, he, params["enc"],
+                         unroll=cfg.n_enc_layers if unroll else 1)
+        enc_out = rms_norm(he, params["enc_final_norm"], cfg.norm_eps)
+
+    # ---- token embedding ------------------------------------------------------
+    h = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.emb_scale:
+        h = h * jnp.asarray(math.sqrt(cfg.d_model), h.dtype)
+
+    # VLM: prepend projected frontend embeddings
+    if cfg.frontend and not cfg.n_enc_layers and not decode:
+        assert frontend_emb is not None
+        fe = frontend_emb.astype(h.dtype) @ params["frontend_proj"]
+        h = jnp.concatenate([fe, h], axis=1)
+        S = h.shape[1]
+
+    if positions is None:
+        positions = (jnp.arange(S, dtype=jnp.int32) if not decode
+                     else jnp.zeros((), jnp.int32))
+    h = shard_fn(h, "residual")
+
+    # ---- decoder segments ---------------------------------------------------------
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache: dict = {}
+    for si, seg in enumerate(cfg.segments()):
+        seg_cache = cache[f"seg{si}"] if cache is not None else None
+        h, ncs, aux = _run_segment(
+            cfg, seg, params[f"seg{si}"], h, positions=positions,
+            seg_cache=seg_cache, enc_out=enc_out, impl=impl,
+            n_groups=n_groups, remat=remat, capacity_factor=capacity_factor,
+            moe_lossless=moe_lossless, unroll=unroll, shard_fn=shard_fn)
+        h = shard_fn(h, "residual")
+        aux_total = aux_total + aux
+        if ncs is not None:
+            new_cache[f"seg{si}"] = ncs
+
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    h = shard_fn(h, "pre_unembed")
+    unembed = (params["embed"].T if cfg.tie_embeddings
+               else params["unembed"])
+    logits = h @ unembed.astype(h.dtype)
+    if cfg.padded_vocab != cfg.vocab_size:  # mask pad ids (fused; CE-safe)
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, jnp.asarray(-1e30, logits.dtype), logits)
+    logits = shard_fn(logits, "logits")
+    if cfg.final_logit_softcap:  # f32 tanh internally, bf16 out (stable + small)
+        logits = softcap(logits.astype(jnp.float32),
+                         cfg.final_logit_softcap).astype(h.dtype)
+    return logits, (new_cache if new_cache else None), aux_total

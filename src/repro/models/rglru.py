@@ -1,0 +1,115 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+    a_t = exp(-c * softplus(Λ) * r_t),   r_t, i_t = sigmoid(W x_t)
+
+Training/prefill runs the linear recurrence as an associative scan; decode is
+the O(1) step. Block layout is the Griffin recurrent block: two input
+branches (recurrence + GeLU gate), temporal conv on the recurrence branch,
+multiplicative merge, output projection.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .blocks import dense_init, rms_norm
+from .config import ModelConfig
+
+_C = 8.0  # Griffin's fixed gate sharpness
+
+
+def init_rglru(key, cfg: ModelConfig, dtype) -> dict:
+    w = cfg.lru_width
+    ks = jax.random.split(key, 6)
+    # Λ init so that a ∈ (0.9, 0.999) at r = 1 (Griffin appendix)
+    u = jax.random.uniform(ks[0], (w,), jnp.float32, 0.9, 0.999)
+    a_param = jnp.log(jnp.expm1(-jnp.log(u) / _C))
+    return {
+        "ln": jnp.zeros((cfg.d_model,), dtype),
+        "w_x": dense_init(ks[1], cfg.d_model, w, dtype),
+        "w_g": dense_init(ks[2], cfg.d_model, w, dtype),
+        "conv_w": (jax.random.normal(ks[3], (cfg.lru_block_width, w),
+                                     jnp.float32) / math.sqrt(cfg.lru_block_width)).astype(dtype),
+        "w_rg": dense_init(ks[4], w, w, dtype),
+        "w_ig": dense_init(ks[5], w, w, dtype),
+        "a_param": a_param,
+        "w_out": dense_init(jax.random.fold_in(key, 7), w, cfg.d_model, dtype),
+    }
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    w = cfg.lru_width
+    return {
+        "conv": jnp.zeros((batch, cfg.lru_block_width - 1, w), dtype),
+        "state": jnp.zeros((batch, w), jnp.float32),
+    }
+
+
+def _conv(x, w, state=None):
+    K = w.shape[0]
+    pad = (jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+           if state is None else state.astype(x.dtype))
+    xp = jnp.concatenate([pad, x], axis=1)
+    return sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+
+
+def _lru_scan(a: jax.Array, bx: jax.Array,
+              h0: Optional[jax.Array] = None) -> tuple[jax.Array, jax.Array]:
+    """Associative scan of h_t = a_t h_{t-1} + bx_t over axis 1 (f32)."""
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    if h0 is not None:
+        bx = bx.at[:, 0].add(a[:, 0] * h0)
+    hs = lax.associative_scan(combine, (a, bx), axis=1)[1]
+    return hs, hs[:, -1]
+
+
+def rglru_layer(cfg: ModelConfig, p: dict, x: jax.Array, *,
+                cache: Optional[dict] = None,
+                ) -> tuple[jax.Array, Optional[dict]]:
+    B, S, D = x.shape
+    w = cfg.lru_width
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    xb = h @ p["w_x"]
+    gate = jax.nn.gelu(h @ p["w_g"])
+
+    if cache is not None and S == 1:
+        conv_in = jnp.concatenate([cache["conv"].astype(x.dtype), xb], axis=1)
+        new_conv = conv_in[:, 1:]
+        xc = jnp.einsum("bkc,kc->bc", conv_in, p["conv_w"])[:, None]
+        h0 = cache["state"]
+    else:
+        xc = _conv(xb, p["conv_w"])
+        h0 = cache["state"] if cache is not None else None
+        pad = cfg.lru_block_width - 1
+        new_conv = xb[:, -pad:] if S >= pad else jnp.concatenate(
+            [jnp.zeros((B, pad - S, w), x.dtype), xb], axis=1)
+
+    r = jax.nn.sigmoid((xc @ p["w_rg"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((xc @ p["w_ig"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["a_param"]) * r
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) with numerical floor
+    beta = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    bx = beta * i * xc.astype(jnp.float32)
+
+    if S == 1 and cache is not None:
+        state = a[:, 0] * h0 + bx[:, 0]
+        hs = state[:, None]
+    else:
+        hs, state = _lru_scan(a, bx, h0)
+
+    y = (hs.astype(x.dtype) * gate) @ p["w_out"]
+    new_cache = ({"conv": new_conv, "state": state}
+                 if cache is not None else None)
+    return x + y, new_cache

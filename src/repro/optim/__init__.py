@@ -1,0 +1,3 @@
+from .adamw import AdamWConfig, init_state, update, global_norm, clip_by_global_norm
+from .schedules import warmup_cosine, wsd, constant, SCHEDULES
+from . import compression

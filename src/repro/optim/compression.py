@@ -1,0 +1,68 @@
+"""Int8 error-feedback gradient compression for data-parallel all-reduce.
+
+A distributed-optimization trick for the 1000+-node regime: gradients are
+quantized to int8 with a per-leaf scale before the cross-pod all-reduce, and
+the quantization error is carried to the next step (error feedback keeps the
+compressed SGD unbiased in the long run — Seide et al. 2014, Karimireddy et
+al. 2019).
+
+Used by ``train.step`` when ``grad_compression="int8_ef"``: the *intra*-pod
+reduction stays full precision (cheap ICI), only the scarce cross-pod
+bandwidth gets the compressed payload — matching the paper's principle of
+minimizing the expensive communication edges.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress(grads, error_state):
+    """Returns (int8 payload, scales, new_error_state_fn inputs)."""
+    def leaf(g, e):
+        g = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        err = g - q.astype(jnp.float32) * scale
+        return q, scale, err
+
+    flat, treedef = jax.tree.flatten(grads)
+    eflat = jax.tree.leaves(error_state)
+    qs, scales, errs = zip(*[leaf(g, e) for g, e in zip(flat, eflat)])
+    return (jax.tree.unflatten(treedef, qs),
+            jax.tree.unflatten(treedef, scales),
+            jax.tree.unflatten(treedef, errs))
+
+
+def decompress(q_tree, scale_tree):
+    return jax.tree.map(
+        lambda q, s: q.astype(jnp.float32) * s, q_tree, scale_tree)
+
+
+def compressed_psum(grads, error_state, axis_name: str):
+    """Error-feedback int8 psum over ``axis_name`` (inside shard_map).
+
+    Scales are psum-maxed first so every participant dequantizes identically.
+    """
+    q, scales, err = compress(grads, error_state)
+    scales = jax.tree.map(lambda s: jax.lax.pmax(s, axis_name), scales)
+    # requantize against the shared scale to keep the payload int8
+    q = jax.tree.map(
+        lambda g, e, s: jnp.clip(
+            jnp.round((g.astype(jnp.float32) + e) / s), -127, 127
+        ).astype(jnp.int8),
+        grads, error_state, scales)
+    summed = jax.tree.map(
+        lambda qq: jax.lax.psum(qq.astype(jnp.int32), axis_name), q)
+    new_err = jax.tree.map(
+        lambda g, e, qq, s: g.astype(jnp.float32) + e -
+        qq.astype(jnp.float32) * s,
+        grads, error_state, q, scales)
+    mean = jax.tree.map(
+        lambda ss, s: ss.astype(jnp.float32) * s, summed, scales)
+    return mean, new_err

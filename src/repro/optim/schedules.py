@@ -1,0 +1,45 @@
+"""LR schedules: linear warmup + cosine, and WSD (warmup-stable-decay,
+MiniCPM arXiv:2404.06395 — the schedule of one of the assigned archs)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(base_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps) /
+                        jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup_steps, warm, base_lr * cos)
+    return lr
+
+
+def wsd(base_lr: float, warmup_steps: int, total_steps: int,
+        decay_frac: float = 0.1, final_frac: float = 0.01):
+    """Warmup -> stable (flat) -> exponential decay over the last decay_frac."""
+    decay_start = int(total_steps * (1.0 - decay_frac))
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup_steps, 1)
+        in_decay = step >= decay_start
+        prog = jnp.clip((step - decay_start) /
+                        jnp.maximum(total_steps - decay_start, 1), 0.0, 1.0)
+        dec = base_lr * jnp.power(final_frac, prog)
+        out = jnp.where(step < warmup_steps, warm,
+                        jnp.where(in_decay, dec, base_lr))
+        return out
+    return lr
+
+
+def constant(base_lr: float):
+    def lr(step):
+        return jnp.asarray(base_lr, jnp.float32)
+    return lr
+
+
+SCHEDULES = {"cosine": warmup_cosine, "wsd": wsd}

@@ -1,0 +1,2 @@
+from .analysis import (Roofline, analyze, parse_collectives, model_flops,
+                       PEAK_FLOPS, HBM_BW, LINK_BW)

@@ -1,0 +1,212 @@
+"""Roofline analysis from the compiled dry-run artifact.
+
+Three terms, per (arch x shape x mesh) cell — all in seconds per step:
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs          (197 TFLOP/s bf16)
+    memory     = HLO_bytes_per_device / HBM_bw              (819 GB/s)
+    collective = Σ_ops ring_bytes(op) / link_bw             (50 GB/s per link)
+
+Notes:
+* XLA's ``compiled.cost_analysis()`` on an SPMD program reports **per-device**
+  FLOPs / bytes (verified empirically in tests) — no division by chip count.
+* collective bytes are NOT in cost_analysis: we parse ``compiled.as_text()``
+  and apply ring formulas over the participating group size g:
+    all-gather:          out_bytes * (g-1)/g
+    reduce-scatter:      in_bytes  * (g-1)/g      (~ out_bytes * (g-1))
+    all-reduce:          2 * bytes * (g-1)/g
+    all-to-all:          bytes * (g-1)/g
+    collective-permute:  bytes
+  assuming one 50 GB/s ICI link is busy per phase (conservative: v5e has a
+  2D torus with more injection bandwidth; we report the pessimistic bound).
+* MODEL_FLOPS = 6·N·D for training (N params, D tokens; 2·N·D for inference)
+  with N = active params for MoE; the usefulness ratio MODEL_FLOPS /
+  (HLO_FLOPs_per_device × chips) exposes remat / dispatch overcompute.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # B/s
+LINK_BW = 50e9            # B/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", )
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> float:
+    """Bytes of 'bf16[16,128]' or a '(tuple, of, shapes)'."""
+    total = 0.0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    counts: dict = field(default_factory=dict)
+    raw_bytes: dict = field(default_factory=dict)   # result bytes by kind
+    wire_bytes: float = 0.0                         # ring-model bytes on the wire
+    top: list = field(default_factory=list)         # (bytes, kind, shape) largest ops
+
+    def add(self, kind: str, nbytes: float, group: int, shape: str = ""):
+        self.counts[kind] = self.counts.get(kind, 0) + 1
+        self.raw_bytes[kind] = self.raw_bytes.get(kind, 0.0) + nbytes
+        self.top.append((nbytes, kind, shape))
+        if len(self.top) > 4096:
+            self.top = sorted(self.top, reverse=True)[:64]
+        g = max(group, 1)
+        if kind == "all-gather":
+            self.wire_bytes += nbytes * (g - 1) / g
+        elif kind == "reduce-scatter":
+            self.wire_bytes += nbytes * (g - 1)     # in_bytes = out * g
+        elif kind == "all-reduce":
+            self.wire_bytes += 2 * nbytes * (g - 1) / g
+        elif kind == "all-to-all":
+            self.wire_bytes += nbytes * (g - 1) / g
+        elif kind == "collective-permute":
+            self.wire_bytes += nbytes
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        nbytes = _shape_bytes(type_str)
+        g = 1
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = gm.group(1).count(",") + 1
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            if gi:
+                g = int(gi.group(2))
+        stats.add(kind, nbytes, g, type_str[:64])
+    return stats
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_dev: float
+    bytes_per_dev: float
+    wire_bytes_per_dev: float
+    model_flops: float
+    collective_counts: dict
+    mem_stats: dict
+    top_collectives: list = field(default_factory=list)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_dev / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_dev / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.wire_bytes_per_dev / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def usefulness(self) -> float:
+        """MODEL_FLOPS / total compiled FLOPs."""
+        tot = self.flops_per_dev * self.chips
+        return self.model_flops / tot if tot else 0.0
+
+    @property
+    def step_time(self) -> float:
+        """Roofline step time: overlapped compute/memory + serialized comm."""
+        return max(self.t_compute, self.t_memory) + self.t_collective
+
+    @property
+    def mfu(self) -> float:
+        """Model FLOPs utilization at the roofline step time."""
+        denom = self.step_time * PEAK_FLOPS * self.chips
+        return self.model_flops / denom if denom else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "hlo_flops_total": self.flops_per_dev * self.chips,
+            "usefulness": self.usefulness,
+            "roofline_mfu": self.mfu,
+            "collectives": self.collective_counts,
+            "top_collectives": self.top_collectives,
+            "bytes_per_dev": self.bytes_per_dev,
+            "wire_bytes_per_dev": self.wire_bytes_per_dev,
+            "mem": self.mem_stats,
+        }
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N_active·D train / 2·N_active·D per forward-token inference."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch  # decode: one token per sequence
+    return 2.0 * n * tokens
+
+
+def analyze(cfg, shape, mesh_name: str, chips: int, compiled,
+            arch: str) -> Roofline:
+    cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    stats = parse_collectives(compiled.as_text())
+    stats.top = sorted(stats.top, reverse=True)[:12]
+    return Roofline(
+        arch=arch, shape=shape.name, mesh=mesh_name, chips=chips,
+        flops_per_dev=float(cost.get("flops", 0.0)),
+        bytes_per_dev=float(cost.get("bytes accessed", 0.0)),
+        wire_bytes_per_dev=stats.wire_bytes,
+        model_flops=model_flops(cfg, shape),
+        collective_counts={k: [stats.counts[k], stats.raw_bytes[k]]
+                           for k in stats.counts},
+        top_collectives=[(b, k, sh) for b, k, sh in stats.top],
+        mem_stats={
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+    )

@@ -1,0 +1,2 @@
+from .telemetry import Telemetry
+from .elastic import ElasticController

@@ -1,0 +1,44 @@
+"""Elastic scaling + assistant-driven re-planning.
+
+The paper's compiler/assistant split maps naturally onto elastic training:
+
+* device count changes (node failure, pool resize) -> re-run the partitioner
+  for the new k (``replan``), restore the checkpoint against the new plan's
+  shardings (``CheckpointManager.restore(shardings=...)``) — automatic model
+  parallelism is what makes this a no-human-in-the-loop operation;
+* cost-model drift / interference -> the scheduling assistants migrate nodes
+  (``core.assistants``); when migrations touch stage boundaries the launcher
+  re-lowers with the updated plan between steps.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.core import plan_model, run_adaptation, AssistantConfig
+from repro.core.planner import Plan
+from repro.models.config import ModelConfig, ShapeConfig
+
+
+@dataclass
+class ElasticController:
+    cfg: ModelConfig
+    shape: ShapeConfig
+    backend: str = "tensor"
+
+    def replan(self, k: int, seed: int = 0) -> Plan:
+        """New placement after a device-count change."""
+        return plan_model(self.cfg, self.shape, k=k, backend=self.backend,
+                          seed=seed)
+
+    def adapt(self, plan: Plan, interference=None,
+              config: AssistantConfig = AssistantConfig()):
+        """Run the §3 assistant protocol on the current plan; returns the
+        adapted assignment + the modeled step-time trace."""
+        trace = run_adaptation(plan.graph, plan.assignment, plan.cost_model,
+                               interference=interference, config=config)
+        return trace
+
+    def should_replan(self, old_k: int, new_k: int) -> bool:
+        return old_k != new_k

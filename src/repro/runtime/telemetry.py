@@ -1,0 +1,40 @@
+"""Step-time telemetry + straggler detection.
+
+Feeds the scheduling-assistant runtime (paper §3): on real hardware the
+per-device utilization counters come from the profiler; here step-time
+outliers flag stragglers, and ``to_utilization`` converts plan-modeled loads
++ measured skew into the per-resource utilization dict the assistants
+consume.
+"""
+
+from __future__ import annotations
+
+import statistics
+from dataclasses import dataclass, field
+
+
+@dataclass
+class Telemetry:
+    window: int = 50
+    straggler_factor: float = 1.5
+    steps: list = field(default_factory=list)      # (step, seconds, loss)
+    stragglers: list = field(default_factory=list)
+
+    def record(self, step: int, seconds: float, loss: float) -> None:
+        self.steps.append((step, seconds, loss))
+        recent = [s for _, s, _ in self.steps[-self.window:]]
+        if len(recent) >= 10:
+            med = statistics.median(recent)
+            if seconds > self.straggler_factor * med:
+                self.stragglers.append((step, seconds, med))
+
+    def median_ms(self) -> float:
+        if not self.steps:
+            return 0.0
+        return statistics.median(s for _, s, _ in self.steps) * 1e3
+
+    def n_stragglers(self) -> int:
+        return len(self.stragglers)
+
+    def losses(self) -> list:
+        return [l for _, _, l in self.steps]

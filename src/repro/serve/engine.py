@@ -1,0 +1,74 @@
+"""Batched serving: prefill + decode steps and a simple continuous engine.
+
+``make_serve_step`` builds the function the decode-shape dry-run cells lower:
+one new token for every sequence in the batch against a seq_len KV cache
+(SSM/hybrid archs carry O(1) state instead — that is the point of the
+long_500k cells).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+
+
+def make_prefill_step(cfg: ModelConfig, impl: str = "chunked",
+                      n_groups: int = 1, shard_fn=None, unroll: bool = False):
+    def prefill_step(params, cache, tokens, frontend_emb=None):
+        logits, new_cache, _ = lm.forward(
+            cfg, params, tokens, frontend_emb=frontend_emb, cache=cache,
+            mode="prefill", impl=impl, n_groups=n_groups, shard_fn=shard_fn,
+            unroll=unroll)
+        next_tok = jnp.argmax(logits[:, -1, :cfg.vocab_size],
+                              axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, impl: str = "chunked",
+                    n_groups: int = 1, shard_fn=None, unroll: bool = False):
+    """decode_step(params, cache, tokens [B,1], pos) -> (next_tok, cache)."""
+    def serve_step(params, cache, tokens, pos):
+        logits, new_cache, _ = lm.forward(
+            cfg, params, tokens, positions=pos, cache=cache, mode="decode",
+            impl=impl, n_groups=n_groups, shard_fn=shard_fn, unroll=unroll)
+        next_tok = jnp.argmax(logits[:, -1, :cfg.vocab_size],
+                              axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+    return serve_step
+
+
+@dataclass
+class Engine:
+    """Minimal batched greedy-decoding engine (examples + tests)."""
+
+    cfg: ModelConfig
+    params: dict
+    kv_len: int
+    dtype: object = jnp.float32
+    impl: str = "chunked"
+
+    def __post_init__(self):
+        self._prefill = jax.jit(make_prefill_step(self.cfg, self.impl))
+        self._decode = jax.jit(make_serve_step(self.cfg, self.impl))
+
+    def generate(self, prompts: jax.Array, max_new_tokens: int,
+                 frontend_emb: Optional[jax.Array] = None) -> jax.Array:
+        B, S = prompts.shape
+        F = (self.cfg.frontend_tokens
+             if (self.cfg.frontend and not self.cfg.n_enc_layers) else 0)
+        cache = lm.init_cache(self.cfg, B, self.kv_len + F, self.dtype)
+        tok, cache = self._prefill(self.params, cache, prompts, frontend_emb)
+        out = [tok]
+        pos = S + F
+        for t in range(max_new_tokens - 1):
+            tok, cache = self._decode(self.params, cache, tok[:, None],
+                                      jnp.asarray(pos + t, jnp.int32))
+            out.append(tok)
+        return jnp.stack(out, axis=1)

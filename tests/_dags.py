@@ -1,0 +1,30 @@
+"""Random-DAG generators shared by partitioner tests (plain + hypothesis)."""
+
+from __future__ import annotations
+
+import random
+
+from repro.core import Graph, Node
+
+
+def random_dag(n_nodes: int, edge_prob: float, seed: int,
+               max_cost: float = 100.0) -> Graph:
+    rng = random.Random(seed)
+    g = Graph()
+    for i in range(n_nodes):
+        g.add_node(Node(
+            id=f"n{i}", kind="op",
+            flops=rng.uniform(1.0, max_cost) * 1e9,
+            bytes_accessed=rng.uniform(1.0, max_cost) * 1e6,
+            relocatable=rng.random() > 0.2))
+    for i in range(n_nodes):
+        for j in range(i + 1, n_nodes):
+            if rng.random() < edge_prob:
+                g.add_edge(f"n{i}", f"n{j}",
+                           bytes=rng.uniform(1.0, max_cost) * 1e6,
+                           control=rng.random() < 0.1)
+    # ensure connectivity along the spine
+    for i in range(n_nodes - 1):
+        if not g.out_edges(f"n{i}"):
+            g.add_edge(f"n{i}", f"n{i+1}", bytes=1e6)
+    return g

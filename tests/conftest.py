@@ -1,0 +1,10 @@
+import os
+
+# Smoke tests and benches see the real (single) device — the 512-device
+# override lives ONLY in repro.launch.dryrun (see DESIGN.md). Keep runs
+# deterministic and CPU-friendly.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_default_prng_impl", "threefry2x32")

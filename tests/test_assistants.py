@@ -1,0 +1,94 @@
+"""Scheduling-assistant (paper §3) behaviour: θ/γ rules, out-boxes,
+adaptation under interference."""
+
+import pytest
+
+from repro.core import (AssistantConfig, CostModel, Graph, Node,
+                        SchedulingAssistants, TAG_COMPUTE, TAG_MEMORY,
+                        homogeneous_devices, heterogeneous_devices,
+                        modeled_step_time, run_adaptation,
+                        simulate_utilization)
+from repro.core.graphgen import build_graph
+from repro.configs import get
+from repro.models.config import SHAPES
+
+
+def uniform_graph(n=16, flops=1e12):
+    g = Graph()
+    for i in range(n):
+        g.add_node(Node(id=f"n{i}", kind="op", flops=flops,
+                        bytes_accessed=1e3, relocatable=True))
+    for i in range(n - 1):
+        g.add_edge(f"n{i}", f"n{i+1}", bytes=1.0)
+    return g
+
+
+def test_overloaded_device_offers_node_to_outbox():
+    g = uniform_graph(8)
+    cm = CostModel(homogeneous_devices(2))
+    cm.tag_nodes(g)
+    a = {f"n{i}": 0 for i in range(8)}  # device 0 holds everything
+    assistants = SchedulingAssistants(g, cm)
+    utils = simulate_utilization(g, a, cm)
+    assert utils[0]["compute"] == pytest.approx(1.0)
+    migs = assistants.step(a, utils)
+    # device 1 idle (< gamma) acquires from device 0's out-box
+    assert len(migs) == 1
+    assert migs[0].src == 0 and migs[0].dst == 1
+    assert a[migs[0].node] == 1
+
+
+def test_no_migration_when_balanced():
+    g = uniform_graph(8)
+    cm = CostModel(homogeneous_devices(2))
+    cm.tag_nodes(g)
+    a = {f"n{i}": i % 2 for i in range(8)}
+    assistants = SchedulingAssistants(g, cm)
+    migs = assistants.step(a, simulate_utilization(g, a, cm))
+    assert migs == []
+
+
+def test_adaptation_recovers_from_skew():
+    g = uniform_graph(16)
+    cm = CostModel(homogeneous_devices(4))
+    cm.tag_nodes(g)
+    a = {f"n{i}": 0 for i in range(16)}
+    trace = run_adaptation(g, a, cm, max_steps=50)
+    assert trace.improvement > 0.5  # step time at least halves
+    assert trace.step_times[-1] <= trace.step_times[0]
+
+
+def test_adaptation_under_interference():
+    """Paper §3 motivation: a co-located app slows device 0; assistants move
+    compute off it even though the static plan was balanced."""
+    g = uniform_graph(16)
+    cm = CostModel(homogeneous_devices(4))
+    cm.tag_nodes(g)
+    a = {f"n{i}": i % 4 for i in range(16)}  # balanced plan
+    interference = [{"compute": 3.0}, {}, {}, {}]  # dev 0 3x slower
+    t0 = modeled_step_time(g, a, cm, interference)
+    trace = run_adaptation(g, a, cm, interference=interference,
+                           config=AssistantConfig(theta=0.9, gamma=0.6))
+    assert trace.step_times[-1] < t0  # adapted placement is faster
+
+
+def test_tags_follow_roofline():
+    g = Graph()
+    g.add_node(Node(id="hot", kind="op", flops=1e15, bytes_accessed=1e3))
+    g.add_node(Node(id="stream", kind="op", flops=1e3, bytes_accessed=1e12))
+    cm = CostModel(homogeneous_devices(2))
+    cm.tag_nodes(g)
+    assert g.nodes["hot"].tag == TAG_COMPUTE
+    assert g.nodes["stream"].tag == TAG_MEMORY
+
+
+def test_assistants_on_real_model_graph():
+    cfg = get("tinyllama-1.1b")
+    g = build_graph(cfg, SHAPES["train_4k"])
+    cm = CostModel(heterogeneous_devices([0.5] + [1.0] * 7))  # slow dev 0
+    cm.select_relocatable(g)
+    cm.tag_nodes(g)
+    from repro.core import block_partition
+    a = block_partition(g, cm)
+    trace = run_adaptation(g, a, cm, max_steps=30)
+    assert trace.step_times[-1] <= trace.step_times[0] * 1.001

@@ -1,0 +1,86 @@
+"""Checkpoint manager: roundtrip, atomic commit, keep-last GC, async,
+reshard-on-restore template semantics."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+
+
+def _state(seed=0):
+    key = jax.random.PRNGKey(seed)
+    return {
+        "params": {"w": jax.random.normal(key, (8, 4)),
+                   "ln": jnp.ones((4,))},
+        "opt": {"m": {"w": jnp.zeros((8, 4)), "ln": jnp.zeros((4,))},
+                "step": jnp.asarray(7, jnp.int32)},
+    }
+
+
+def test_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    state = _state()
+    mgr.save(3, state, meta={"arch": "test"})
+    restored, meta = mgr.restore(jax.tree.map(jnp.zeros_like, state))
+    assert meta["step"] == 3 and meta["arch"] == "test"
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_keep_last_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last=2)
+    state = _state()
+    for s in [1, 2, 3, 4]:
+        mgr.save(s, state)
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_atomic_no_partial_dirs(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _state())
+    names = os.listdir(tmp_path)
+    assert all(not n.startswith("tmp.") for n in names)
+
+
+def test_async_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=True)
+    mgr.save(5, _state())
+    mgr.wait()
+    assert mgr.latest_step() == 5
+    restored, _ = mgr.restore(jax.tree.map(jnp.zeros_like, _state()))
+    assert restored["opt"]["step"] == 7
+
+
+def test_restore_specific_step(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last=5)
+    mgr.save(1, _state(seed=1))
+    mgr.save(2, _state(seed=2))
+    r1, m1 = mgr.restore(jax.tree.map(jnp.zeros_like, _state()), step=1)
+    e1 = _state(seed=1)
+    np.testing.assert_allclose(np.asarray(r1["params"]["w"]),
+                               np.asarray(e1["params"]["w"]))
+
+
+def test_restore_with_shardings_single_device(tmp_path):
+    """Reshard path: device_put against explicit shardings on restore."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    mgr = CheckpointManager(str(tmp_path))
+    state = _state()
+    mgr.save(1, state)
+    sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), state)
+    restored, _ = mgr.restore(jax.tree.map(jnp.zeros_like, state),
+                              shardings=sh)
+    assert restored["params"]["w"].sharding == NamedSharding(mesh, P())
+
+
+def test_shape_mismatch_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"w": jnp.zeros((4,))})
+    with pytest.raises(AssertionError):
+        mgr.restore({"w": jnp.zeros((8,))})

@@ -1,0 +1,70 @@
+"""Flash-attention Pallas kernel vs jnp oracle: shape/dtype/flag sweep in
+interpret mode (deliverable c)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.flash_attention import flash_attention, reference
+
+CASES = [
+    # B, Sq, Skv, H, KV, hd, causal, window, cap
+    (2, 256, 256, 4, 2, 64, True, 0, 0.0),
+    (2, 256, 256, 4, 4, 64, True, 0, 50.0),      # softcap (gemma2)
+    (1, 256, 256, 8, 2, 128, True, 128, 0.0),    # sliding window (SWA)
+    (2, 128, 384, 4, 1, 64, True, 0, 0.0),       # MQA + q offset (cache)
+    (2, 256, 256, 4, 2, 64, False, 0, 0.0),      # bidirectional (encoder)
+    (1, 512, 512, 2, 2, 256, True, 256, 30.0),   # hd=256 + window + cap
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_oracle(case, dtype):
+    B, Sq, Skv, H, KV, hd, causal, window, cap = case
+    key = jax.random.PRNGKey(42)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, Skv, KV, hd), dtype)
+    v = jax.random.normal(ks[2], (B, Skv, KV, hd), dtype)
+    qp = jnp.arange(Skv - Sq, Skv, dtype=jnp.int32)
+    kp = jnp.arange(Skv, dtype=jnp.int32)
+    out = flash_attention(q, k, v, q_positions=qp, k_positions=kp,
+                          causal=causal, window=window, logit_softcap=cap,
+                          interpret=True)
+    exp = reference(q, k, v, q_positions=qp, k_positions=kp, causal=causal,
+                    window=window, logit_softcap=cap)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    err = float(jnp.max(jnp.abs(out.astype(jnp.float32) -
+                                exp.astype(jnp.float32))))
+    assert err < tol, (case, dtype, err)
+
+
+def test_empty_cache_slots_are_masked():
+    """k_positions = -1 (unwritten cache slots) must not contribute."""
+    key = jax.random.PRNGKey(0)
+    B, S, H, hd = 1, 128, 2, 64
+    q = jax.random.normal(key, (B, S, H, hd))
+    k = jax.random.normal(key, (B, S, H, hd))
+    v = jax.random.normal(key, (B, S, H, hd))
+    kp_full = jnp.arange(S, dtype=jnp.int32)
+    kp_half = jnp.where(kp_full < S // 2, kp_full, -1)
+    out = flash_attention(q, k, v, q_positions=kp_full, k_positions=kp_half,
+                          causal=True, interpret=True)
+    exp = reference(q[:, :], k, v, q_positions=kp_full, k_positions=kp_half,
+                    causal=True)
+    assert float(jnp.max(jnp.abs(out - exp))) < 2e-5
+
+
+def test_block_size_invariance():
+    key = jax.random.PRNGKey(7)
+    B, S, H, hd = 1, 512, 2, 64
+    q = jax.random.normal(key, (B, S, H, hd))
+    k = jax.random.normal(key, (B, S, H, hd))
+    v = jax.random.normal(key, (B, S, H, hd))
+    p = jnp.arange(S, dtype=jnp.int32)
+    o1 = flash_attention(q, k, v, q_positions=p, k_positions=p,
+                         block_q=128, block_k=128, interpret=True)
+    o2 = flash_attention(q, k, v, q_positions=p, k_positions=p,
+                         block_q=256, block_k=64, interpret=True)
+    assert float(jnp.max(jnp.abs(o1 - o2))) < 1e-5
