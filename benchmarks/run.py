@@ -13,7 +13,7 @@ import traceback
 
 def main() -> None:
     from benchmarks import (assistants_adaptation, partition_quality,
-                            pipeline_model, roofline_table)
+                            pipeline_model, roofline_table, serve_throughput)
 
     print("name,us_per_call,derived")
 
@@ -34,6 +34,11 @@ def main() -> None:
         print(f"{r['name']},{r['us_per_call']:.0f},"
               f"naive={r['t_naive_ms']:.1f}ms;plan={r['t_plan_ms']:.1f}ms;"
               f"speedup={r['speedup']:.2f}x")
+
+    for r in serve_throughput.run():
+        print(f"{r['name']},{r['us_per_call']:.0f},"
+              f"tok_s={r['tok_per_sec']:.1f};makespan={r['makespan_s']:.2f}s;"
+              f"occ={r['occupancy']:.2f}")
 
     try:
         rl = roofline_table.run()

@@ -32,6 +32,9 @@ class AssistantConfig:
     gamma: float = 0.50          # under-utilization threshold (paper: "say, 50%")
     resources: tuple[str, ...] = TAGS
     max_outbox: int = 1          # paper: "selects one of the ... nodes"
+    cooldown: int = 5            # cycles a migrated node is pinned before it
+                                 # may be offered again (hysteresis: stops
+                                 # ping-pong under sustained interference)
 
 
 RESOURCE_OF_TAG = {TAG_COMPUTE: "compute", TAG_MEMORY: "memory", TAG_NETWORK: "network"}
@@ -124,6 +127,8 @@ class SchedulingAssistants:
         self.state = AssistantState(
             out_boxes=[{r: [] for r in ("compute", "memory", "network")}
                        for _ in range(cost_model.k)])
+        self._clock = 0
+        self._last_moved: dict[str, int] = {}
 
     # -- rule 1: overloaded devices offer nodes -------------------------------
     def _offer(self, assignment: dict[str, int],
@@ -137,9 +142,12 @@ class SchedulingAssistants:
                     continue
                 tag = TAG_OF_RESOURCE[res]
                 # offer the costliest matching relocatable node on this device
+                # (skipping nodes still in their post-migration cooldown)
                 cands = [nid for nid, dev in assignment.items()
                          if dev == d and self.g.nodes[nid].relocatable
-                         and self.g.nodes[nid].tag == tag and nid not in box]
+                         and self.g.nodes[nid].tag == tag and nid not in box
+                         and self._clock - self._last_moved.get(
+                             nid, -self.cfg.cooldown) >= self.cfg.cooldown]
                 if cands:
                     cands.sort(key=lambda nid: -self.g.nodes[nid].flops)
                     box.append(cands[0])
@@ -170,8 +178,12 @@ class SchedulingAssistants:
     def step(self, assignment: dict[str, int],
              utils: list[dict[str, float]]) -> list[Migration]:
         """One assistant cycle: offers then acquisitions. Mutates assignment."""
+        self._clock += 1
         self._offer(assignment, utils)
-        return self._acquire(assignment, utils)
+        migrations = self._acquire(assignment, utils)
+        for m in migrations:
+            self._last_moved[m.node] = self._clock
+        return migrations
 
 
 @dataclass

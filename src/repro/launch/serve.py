@@ -1,8 +1,16 @@
-"""Batched serving launcher (greedy decode) — mirrors launch/train.py.
+"""Batched serving launcher — static batch or continuous batching.
 
 Usage:
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
         --reduced --batch 4 --prompt-len 16 --max-new 32
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+        --reduced --continuous --requests 8 --stagger 2 --adapt --devices 4
+
+``--continuous`` drives the slot-scheduled engine over a staggered arrival
+trace; ``--adapt`` then closes the paper's compiler/assistant loop: the
+serving telemetry (slot occupancy, cache pressure) feeds the §3 scheduling
+assistants, which rebalance the compiler's plan under the measured serving
+interference.
 """
 
 from __future__ import annotations
@@ -14,30 +22,15 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs
+from repro.core import plan_model, run_adaptation
 from repro.models import lm
-from repro.serve import Engine
+from repro.models.config import SHAPES
+from repro.serve import ContinuousEngine, Engine
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--max-new", type=int, default=32)
-    ap.add_argument("--kv-len", type=int, default=128)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
-
-    cfg = configs.get(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    key = jax.random.PRNGKey(args.seed)
-    params = lm.init_params(cfg, key, jnp.float32 if args.reduced
-                            else jnp.bfloat16)
+def _static(args, cfg, params, key):
     eng = Engine(cfg, params, kv_len=args.kv_len,
                  dtype=jnp.float32 if args.reduced else jnp.bfloat16)
-
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size)
     fe = (jax.random.normal(key, (args.batch, cfg.frontend_tokens,
@@ -50,6 +43,80 @@ def main(argv=None):
     print(f"[serve] {args.arch}: generated {out.shape} in {dt:.2f}s "
           f"({toks/dt:.1f} tok/s batched)")
     print("first sequence:", out[0].tolist())
+
+
+def _continuous(args, cfg, params, key):
+    eng = ContinuousEngine(cfg, params, kv_len=args.kv_len,
+                           n_slots=args.batch,
+                           dtype=jnp.float32 if args.reduced else jnp.bfloat16)
+    # staggered arrivals: request i becomes admissible at step i * stagger
+    for i in range(args.requests):
+        prompt = jax.random.randint(jax.random.fold_in(key, i),
+                                    (args.prompt_len,), 0, cfg.vocab_size)
+        eng.submit(prompt, max_new_tokens=args.max_new, rid=i,
+                   arrival=i * args.stagger)
+    t0 = time.time()
+    results = eng.run()
+    dt = time.time() - t0
+    tel = eng.telemetry
+    total = sum(len(v) for v in results.values())
+    print(f"[serve-cb] {args.arch}: {len(results)} requests, {total} tokens "
+          f"in {dt:.2f}s ({total/dt:.1f} tok/s)")
+    if not results:
+        return
+    print(f"[serve-cb] occupancy={tel.occupancy():.2f} "
+          f"cache_pressure={tel.cache_pressure():.2f} "
+          f"peak={tel.peak_cache_pressure():.2f} "
+          f"step={tel.mean_step_ms():.1f}ms "
+          f"slot_reuse={eng.scheduler.max_slot_reuse()}")
+    print("first request:", results[0])
+
+    if args.adapt:
+        plan = plan_model(cfg, SHAPES["decode_32k"], k=args.devices)
+        cb = tel.assistant_callback(plan.graph, plan.cost_model)
+        trace = run_adaptation(plan.graph, plan.assignment, plan.cost_model,
+                               interference=tel.device_interference(plan.k),
+                               telemetry=cb)
+        n_migs = sum(len(m) for m in trace.migrations)
+        print(f"[adapt] plan {plan.describe()}")
+        print(f"[adapt] assistants: {n_migs} migrations, step time "
+              f"{trace.step_times[0]*1e3:.2f}ms -> "
+              f"{trace.step_times[-1]*1e3:.2f}ms "
+              f"({trace.improvement:.1%} improvement under serving load)")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="static batch size / continuous slot count")
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--kv-len", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching (slot scheduler + paged cache)")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="continuous: number of requests in the trace")
+    ap.add_argument("--stagger", type=int, default=2,
+                    help="continuous: arrival gap between requests, in steps")
+    ap.add_argument("--adapt", action="store_true",
+                    help="feed serve telemetry to the §3 assistants")
+    ap.add_argument("--devices", type=int, default=4,
+                    help="device count for --adapt planning")
+    args = ap.parse_args(argv)
+
+    cfg = configs.get(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    key = jax.random.PRNGKey(args.seed)
+    params = lm.init_params(cfg, key, jnp.float32 if args.reduced
+                            else jnp.bfloat16)
+    if args.continuous:
+        _continuous(args, cfg, params, key)
+    else:
+        _static(args, cfg, params, key)
 
 
 if __name__ == "__main__":

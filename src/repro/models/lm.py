@@ -123,6 +123,28 @@ def init_cache(cfg: ModelConfig, batch: int, kv_len: int,
     return cache
 
 
+def init_slot_caches(cfg: ModelConfig, n_slots: int, kv_len: int,
+                     dtype=jnp.bfloat16) -> dict:
+    """Per-slot decode caches for continuous batching: every leaf of the
+    single-request cache (``init_cache(cfg, 1, kv_len)``) gains a leading
+    slot axis. Each slot is an independent single-request cache lane —
+    including the per-lane ``pos`` bookkeeping that a shared batched cache
+    cannot represent when slots sit at different sequence positions."""
+    single = init_cache(cfg, 1, kv_len, dtype)
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n_slots,) + x.shape).copy(), single)
+
+
+def write_slot_cache(caches: dict, single: dict, slot) -> dict:
+    """Insert a single-request cache into lane ``slot`` of a slot-stacked
+    cache tree. ``slot`` may be a traced index (one compile covers all
+    slots). Replaces the whole lane, so a freshly prefilled request never
+    sees the previous occupant's state."""
+    return jax.tree.map(
+        lambda full, one: lax.dynamic_update_index_in_dim(full, one, slot, 0),
+        caches, single)
+
+
 # =============================================================================
 # forward
 # =============================================================================

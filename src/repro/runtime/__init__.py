@@ -1,2 +1,2 @@
-from .telemetry import Telemetry
+from .telemetry import ServeStep, ServeTelemetry, Telemetry
 from .elastic import ElasticController

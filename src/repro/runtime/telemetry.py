@@ -1,16 +1,25 @@
-"""Step-time telemetry + straggler detection.
+"""Step-time telemetry + straggler detection + serving telemetry.
 
 Feeds the scheduling-assistant runtime (paper §3): on real hardware the
 per-device utilization counters come from the profiler; here step-time
 outliers flag stragglers, and ``to_utilization`` converts plan-modeled loads
 + measured skew into the per-resource utilization dict the assistants
 consume.
+
+``ServeTelemetry`` is the serving-side counterpart: the continuous-batching
+engine records slot occupancy, KV-cache block pressure and step latency each
+decode step, and ``assistant_callback`` turns that record into the
+``telemetry=`` feed of ``core.assistants.run_adaptation`` — live serving
+interference (instead of the analytical simulator alone) driving the §3
+out-box protocol.
 """
 
 from __future__ import annotations
 
 import statistics
+from collections import deque
 from dataclasses import dataclass, field
+from typing import Callable
 
 
 @dataclass
@@ -38,3 +47,143 @@ class Telemetry:
 
     def losses(self) -> list:
         return [l for _, _, l in self.steps]
+
+
+@dataclass
+class ServeStep:
+    """One continuous-batching engine step's counters."""
+
+    step: int
+    seconds: float
+    active_slots: tuple          # slot indices that decoded this step
+    n_slots: int
+    blocks_in_use: int
+    n_blocks: int
+    prefills: int = 0
+    new_tokens: int = 0
+
+
+@dataclass
+class ServeTelemetry:
+    """Per-step serving counters + the bridge to the §3 assistants.
+
+    ``device_interference`` maps slot occupancy onto the device mesh (slot s
+    is served by device ``s % k``, the engine's round-robin lane placement)
+    and cache pressure onto memory, producing the per-device busy-time
+    multipliers ``core.assistants.simulate_utilization`` consumes.
+    """
+
+    window: int = 50
+    alpha: float = 0.75          # compute inflation per unit slot occupancy
+    beta: float = 0.5            # memory inflation per unit cache pressure
+    history: int = 10_000        # retained ServeStep records (memory bound
+                                 # for long-lived serving loops); whole-run
+                                 # totals below survive eviction
+    steps: deque = field(default_factory=deque)
+
+    def __post_init__(self):
+        self.steps = deque(self.steps, maxlen=self.history)
+        self._total_tokens = 0
+        self._busy_seconds = 0.0
+        self._peak_pressure = 0.0
+        self._max_concurrency = 0
+
+    def reset(self) -> None:
+        """Drop all recorded steps and whole-run aggregates."""
+        self.steps.clear()
+        self._total_tokens = 0
+        self._busy_seconds = 0.0
+        self._peak_pressure = 0.0
+        self._max_concurrency = 0
+
+    def record_step(self, step: int, seconds: float, active_slots,
+                    n_slots: int, blocks_in_use: int, n_blocks: int,
+                    prefills: int = 0, new_tokens: int = 0) -> None:
+        self.steps.append(ServeStep(
+            step=step, seconds=seconds, active_slots=tuple(active_slots),
+            n_slots=n_slots, blocks_in_use=blocks_in_use, n_blocks=n_blocks,
+            prefills=prefills, new_tokens=new_tokens))
+        self._total_tokens += new_tokens + prefills
+        self._busy_seconds += seconds
+        if n_blocks:
+            self._peak_pressure = max(self._peak_pressure,
+                                      blocks_in_use / n_blocks)
+        self._max_concurrency = max(self._max_concurrency, len(active_slots))
+
+    # -- aggregates -----------------------------------------------------------
+    def _recent(self) -> list:
+        recent = list(self.steps)
+        return recent[-self.window:]
+
+    def occupancy(self) -> float:
+        """Mean fraction of slots decoding over the recent window."""
+        recent = self._recent()
+        if not recent:
+            return 0.0
+        return statistics.mean(
+            len(s.active_slots) / s.n_slots for s in recent if s.n_slots)
+
+    def cache_pressure(self) -> float:
+        """Mean fraction of KV-cache blocks allocated over the recent window."""
+        recent = self._recent()
+        if not recent:
+            return 0.0
+        return statistics.mean(
+            s.blocks_in_use / s.n_blocks for s in recent if s.n_blocks)
+
+    def peak_cache_pressure(self) -> float:
+        return self._peak_pressure
+
+    def max_concurrency(self) -> int:
+        return self._max_concurrency
+
+    def mean_step_ms(self) -> float:
+        recent = self._recent()
+        if not recent:
+            return 0.0
+        return statistics.mean(s.seconds for s in recent) * 1e3
+
+    def total_tokens(self) -> int:
+        return self._total_tokens
+
+    def tokens_per_sec(self) -> float:
+        if self._busy_seconds <= 0:
+            return 0.0
+        return self._total_tokens / self._busy_seconds
+
+    # -- assistant bridge (paper §3) -------------------------------------------
+    def device_interference(self, k: int) -> list:
+        """Per-device busy-time multipliers from serving load.
+
+        Slot s maps to device ``s % k``; a device whose lanes are saturated
+        gets its compute busy time inflated by ``1 + alpha``, and cache
+        pressure inflates every device's memory busy time.
+        """
+        recent = self._recent()
+        press = self.cache_pressure()
+        per_dev = [0.0] * k
+        if recent:
+            for s in recent:
+                slots_per_dev = max(1, -(-s.n_slots // k))
+                hits = [0] * k
+                for slot in s.active_slots:
+                    hits[slot % k] += 1
+                for d in range(k):
+                    per_dev[d] += min(1.0, hits[d] / slots_per_dev)
+            per_dev = [x / len(recent) for x in per_dev]
+        return [{"compute": 1.0 + self.alpha * per_dev[d],
+                 "memory": 1.0 + self.beta * press,
+                 "network": 1.0} for d in range(k)]
+
+    def assistant_callback(self, graph, cost_model) -> Callable:
+        """A ``telemetry=`` callback for ``core.assistants.run_adaptation``:
+        utilization under the measured serving interference, re-evaluated
+        against each candidate assignment as the assistants migrate nodes."""
+        from repro.core.assistants import simulate_utilization
+
+        interference = self.device_interference(cost_model.k)
+
+        def callback(assignment):
+            return simulate_utilization(graph, assignment, cost_model,
+                                        interference=interference)
+        return callback

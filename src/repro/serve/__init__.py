@@ -1,1 +1,3 @@
-from .engine import make_serve_step, make_prefill_step, Engine
+from .cache import BlockAllocator, CacheConfig
+from .engine import ContinuousEngine, Engine, make_prefill_step, make_serve_step
+from .scheduler import ActiveSlot, Request, SlotScheduler

@@ -1,0 +1,117 @@
+"""Block (paged) KV-cache accounting for the continuous-batching engine.
+
+The physical decode cache is the dense per-slot tree built by
+``models.lm.init_slot_caches`` — each slot owns a ``kv_len``-capacity lane.
+This module is the *allocator* that governs it, vLLM-style: cache HBM is
+divided into fixed-size blocks, each admitted request owns a per-slot block
+table that grows one block at a time as it decodes, and every block is
+reclaimed when the request finishes (EOS or max-tokens).  The allocator is
+what makes admission control and the cache-pressure telemetry real: the
+scheduler refuses to admit a request whose worst case cannot fit, and
+``ServeTelemetry`` reports ``blocks_in_use / n_blocks`` to the scheduling
+assistants (paper §3) as serving memory pressure.
+
+Pure Python, no jax — the allocator runs on the host between device steps.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class CacheConfig:
+    """Block pool geometry: ``n_blocks`` blocks of ``block_size`` tokens."""
+
+    block_size: int = 16
+    n_blocks: int = 256
+
+    def blocks_for(self, n_tokens: int) -> int:
+        """Blocks needed to hold ``n_tokens`` cache entries."""
+        return max(0, -(-n_tokens // self.block_size))
+
+
+class BlockAllocator:
+    """Free-list block allocator with per-slot block tables."""
+
+    def __init__(self, config: CacheConfig):
+        self.config = config
+        # LIFO free list: reclaimed blocks are reused first (cache-friendly)
+        self._free: list[int] = list(range(config.n_blocks - 1, -1, -1))
+        # slot -> ordered block ids backing that slot's cache lane
+        self.tables: dict[int, list[int]] = {}
+        # slot -> tokens currently resident (drives the growth math)
+        self._tokens: dict[int, int] = {}
+
+    # -- queries ----------------------------------------------------------------
+    @property
+    def n_blocks(self) -> int:
+        return self.config.n_blocks
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_in_use(self) -> int:
+        return self.config.n_blocks - len(self._free)
+
+    def pressure(self) -> float:
+        """Fraction of the block pool currently allocated, in [0, 1]."""
+        return self.n_in_use / self.config.n_blocks if self.config.n_blocks else 0.0
+
+    def can_allocate(self, n_tokens: int) -> bool:
+        return self.config.blocks_for(n_tokens) <= self.n_free
+
+    # -- lifecycle ---------------------------------------------------------------
+    def allocate(self, slot: int, n_tokens: int) -> list[int]:
+        """Claim blocks for a newly admitted request occupying ``slot``."""
+        if slot in self.tables:
+            raise ValueError(f"slot {slot} already has an allocation")
+        need = self.config.blocks_for(n_tokens)
+        if need > self.n_free:
+            raise MemoryError(
+                f"need {need} blocks for {n_tokens} tokens, {self.n_free} free")
+        self.tables[slot] = [self._free.pop() for _ in range(need)]
+        self._tokens[slot] = n_tokens
+        return list(self.tables[slot])
+
+    def extend(self, slot: int, n_tokens_total: int) -> list[int]:
+        """Grow ``slot``'s table to cover ``n_tokens_total`` resident tokens.
+
+        Returns the newly claimed block ids (usually empty — a new block is
+        only needed every ``block_size`` decode steps).
+        """
+        if slot not in self.tables:
+            raise KeyError(f"slot {slot} has no allocation")
+        if n_tokens_total < self._tokens[slot]:
+            raise ValueError(
+                f"slot {slot}: cannot shrink {self._tokens[slot]} -> {n_tokens_total}")
+        need = self.config.blocks_for(n_tokens_total) - len(self.tables[slot])
+        if need > self.n_free:
+            raise MemoryError(
+                f"slot {slot}: need {need} more blocks, {self.n_free} free")
+        fresh = [self._free.pop() for _ in range(need)]
+        self.tables[slot].extend(fresh)
+        self._tokens[slot] = n_tokens_total
+        return fresh
+
+    def free_slot(self, slot: int) -> int:
+        """Reclaim every block owned by ``slot`` (EOS / max-tokens). Returns
+        the number of blocks returned to the pool."""
+        if slot not in self.tables:
+            raise KeyError(f"slot {slot} has no allocation")
+        blocks = self.tables.pop(slot)
+        self._tokens.pop(slot)
+        self._free.extend(reversed(blocks))
+        return len(blocks)
+
+    def check_no_leaks(self) -> None:
+        """Invariant check: with no live slots, the whole pool is free."""
+        if self.tables:
+            raise AssertionError(f"live tables remain: {sorted(self.tables)}")
+        if len(self._free) != self.config.n_blocks:
+            leaked = self.config.n_blocks - len(self._free)
+            raise AssertionError(f"{leaked} blocks leaked")
+        if len(set(self._free)) != len(self._free):
+            raise AssertionError("duplicate block ids in free list")

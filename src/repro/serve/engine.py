@@ -1,21 +1,36 @@
-"""Batched serving: prefill + decode steps and a simple continuous engine.
+"""Batched serving: prefill/decode step factories, the static-batch ``Engine``
+and the continuous-batching ``ContinuousEngine``.
 
 ``make_serve_step`` builds the function the decode-shape dry-run cells lower:
 one new token for every sequence in the batch against a seq_len KV cache
 (SSM/hybrid archs carry O(1) state instead — that is the point of the
 long_500k cells).
+
+``ContinuousEngine`` serves a live request stream: a slot scheduler admits
+queued prompts into free decode lanes mid-stream (no batch boundaries), a
+block allocator accounts the KV cache and reclaims it on EOS/max-tokens, and
+per-step telemetry (slot occupancy, cache pressure, latency) feeds the paper
+§3 scheduling assistants.  Decode runs as a vmapped single-request lane over
+a slot-stacked cache tree, so every lane carries its own absolute position —
+the emitted tokens are bit-identical to per-request greedy decoding.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+import time
+from dataclasses import dataclass, field
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import lm
 from repro.models.config import ModelConfig
+from repro.runtime.telemetry import ServeTelemetry
+
+from .cache import BlockAllocator, CacheConfig
+from .scheduler import ActiveSlot, Request, SlotScheduler
 
 
 def make_prefill_step(cfg: ModelConfig, impl: str = "chunked",
@@ -72,3 +87,169 @@ class Engine:
                                       jnp.asarray(pos + t, jnp.int32))
             out.append(tok)
         return jnp.stack(out, axis=1)
+
+
+@dataclass
+class ContinuousEngine:
+    """Continuous-batching greedy-decoding engine (decoder-only archs).
+
+    Requests are ``submit()``-ed with an arrival step, then ``run()`` drives
+    the loop: admit arrived requests into free slots (single-request prefill
+    inserted into the slot's cache lane), one vmapped decode step across all
+    lanes with per-slot positions, retire slots on EOS/max-tokens and reclaim
+    their cache blocks.  A lane's computation is exactly the B=1 decode path,
+    so outputs are token-identical to ``Engine.generate`` per request.
+
+    Prefill compiles once per distinct prompt length (bucket prompts upstream
+    if that matters); decode and cache insertion compile once.
+    """
+
+    cfg: ModelConfig
+    params: dict
+    kv_len: int
+    n_slots: int = 4
+    dtype: object = jnp.float32
+    impl: str = "chunked"
+    block_size: int = 16
+    telemetry: Optional[ServeTelemetry] = None
+    _next_rid: int = field(default=0, repr=False)
+
+    def __post_init__(self):
+        if self.cfg.frontend or self.cfg.n_enc_layers:
+            raise NotImplementedError(
+                "ContinuousEngine serves decoder-only archs; use Engine for "
+                "frontend/enc-dec configs")
+        blocks_per_slot = -(-self.kv_len // self.block_size)
+        self.allocator = BlockAllocator(CacheConfig(
+            block_size=self.block_size,
+            n_blocks=self.n_slots * blocks_per_slot))
+        self.scheduler = SlotScheduler(self.n_slots, self.allocator,
+                                       self.kv_len)
+        if self.telemetry is None:
+            self.telemetry = ServeTelemetry()
+        self._prefill = jax.jit(make_prefill_step(self.cfg, self.impl))
+        serve_step = make_serve_step(self.cfg, self.impl)
+
+        def lane_decode(params, cache, tok, pos):
+            nt, nc = serve_step(params, cache, tok.reshape(1, 1), pos)
+            return nt[0], nc
+
+        self._decode = jax.jit(jax.vmap(lane_decode,
+                                        in_axes=(None, 0, 0, 0)))
+
+        # one fused dispatch per admission: lane insert + token/pos scatter
+        def admit_update(caches, single, toks, pos, slot, tok, start_pos):
+            caches = lm.write_slot_cache(caches, single, slot)
+            return caches, toks.at[slot].set(tok), pos.at[slot].set(start_pos)
+
+        self._insert = jax.jit(admit_update)
+        self._caches = lm.init_slot_caches(self.cfg, self.n_slots,
+                                           self.kv_len, self.dtype)
+        # reusable zeroed single-request cache fed to every prefill (jax
+        # arrays are immutable, so sharing the template across admissions
+        # is safe and saves an alloc+zero per request)
+        self._fresh = lm.init_cache(self.cfg, 1, self.kv_len, self.dtype)
+        self._toks = jnp.zeros((self.n_slots,), jnp.int32)
+        self._pos = jnp.zeros((self.n_slots,), jnp.int32)
+        self._now = 0
+        self._rids: set = set()
+
+    @property
+    def now(self) -> int:
+        """Current engine step — submit() arrivals are absolute against it."""
+        return self._now
+
+    # -- intake -----------------------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int, *, rid=None,
+               arrival: int = 0, eos_id: Optional[int] = None) -> object:
+        """Queue a request; returns its id. ``prompt`` is a 1-D token id
+        sequence; ``arrival`` is the engine step at which it becomes
+        admissible (0 = immediately)."""
+        prompt = [int(t) for t in prompt]
+        if rid is None:
+            while self._next_rid in self._rids:   # skip explicit ids in use
+                self._next_rid += 1
+            rid = self._next_rid
+            self._next_rid += 1
+        elif rid in self._rids:
+            raise ValueError(f"duplicate request id {rid!r}")
+        self.scheduler.submit(Request(rid=rid, prompt=prompt,
+                                      max_new_tokens=max_new_tokens,
+                                      arrival=arrival, eos_id=eos_id))
+        self._rids.add(rid)          # only after validation succeeded
+        return rid
+
+    # -- serving loop --------------------------------------------------------------
+    def _admit_one(self, act: ActiveSlot, slot_idx) -> None:
+        prompt = jnp.asarray(act.request.prompt, jnp.int32)[None]
+        tok, cache = self._prefill(self.params, self._fresh, prompt, None)
+        self._caches, self._toks, self._pos = self._insert(
+            self._caches, cache, self._toks, self._pos, slot_idx, tok[0],
+            jnp.asarray(act.request.prompt_len, jnp.int32))
+        act.tokens.append(int(tok[0]))
+
+    def run(self, max_steps: Optional[int] = None) -> dict:
+        """Serve every queued request to completion. Returns
+        {rid: [generated token ids]} (the prefill token included).
+
+        The engine clock (``self.now``) persists across calls, so arrivals
+        are absolute engine steps and a ``max_steps``-bounded run can be
+        resumed by calling ``run()`` again."""
+        results: dict = {}
+        steps = 0
+        while self.scheduler.has_work():
+            if max_steps is not None and steps >= max_steps:
+                break
+            now = self._now
+            t0 = time.perf_counter()
+            prefills = 0
+            for act in self.scheduler.admit(now):
+                self._admit_one(act, jnp.asarray(act.slot, jnp.int32))
+                prefills += 1
+                if act.is_finished():          # max_new == 1 or prompt-EOS
+                    results[act.request.rid] = self.scheduler.finish(
+                        act.slot).tokens
+
+            if not self.scheduler.active:
+                if prefills:                   # all admissions done at prefill
+                    self.telemetry.record_step(
+                        step=now, seconds=time.perf_counter() - t0,
+                        active_slots=(), n_slots=self.n_slots,
+                        blocks_in_use=self.allocator.n_in_use,
+                        n_blocks=self.allocator.n_blocks,
+                        prefills=prefills, new_tokens=0)
+                    self._now = now + 1
+                    steps += 1
+                    continue
+                nxt = self.scheduler.next_arrival()
+                if nxt is None:
+                    break
+                self._now = max(now + 1, nxt)  # idle: jump to next arrival
+                continue
+
+            active = sorted(self.scheduler.active)
+            toks, self._caches = self._decode(self.params, self._caches,
+                                              self._toks, self._pos)
+            self._toks = toks
+            self._pos = self._pos + 1
+            toks_host = np.asarray(toks)       # one device->host transfer
+            new_tokens = 0
+            for slot in active:
+                act = self.scheduler.active[slot]
+                act.tokens.append(int(toks_host[slot]))
+                new_tokens += 1
+                # cache entries resident after this step: prompt + all decode
+                # writes so far (the just-emitted token is not yet written)
+                self.allocator.extend(slot, act.position - 1)
+                if act.is_finished():
+                    results[act.request.rid] = self.scheduler.finish(
+                        slot).tokens
+            self.telemetry.record_step(
+                step=now, seconds=time.perf_counter() - t0,
+                active_slots=active, n_slots=self.n_slots,
+                blocks_in_use=self.allocator.n_in_use,
+                n_blocks=self.allocator.n_blocks,
+                prefills=prefills, new_tokens=new_tokens)
+            self._now = now + 1
+            steps += 1
+        return results

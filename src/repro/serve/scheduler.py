@@ -1,0 +1,138 @@
+"""Request queue + slot scheduler for continuous batching.
+
+The engine owns ``n_slots`` decode lanes.  The scheduler admits pending
+requests into free lanes *mid-stream* — a request arriving while other slots
+are decoding joins the running batch at its next step instead of waiting for
+a batch boundary.  Admission is strict FCFS (no head-of-line skipping, so
+completion order is predictable) and is gated on the block allocator: a
+request is only admitted when its worst case (prompt + max_new_tokens) fits
+in ``kv_len`` and its prompt's blocks are free.
+
+Arrivals are measured in engine steps (one step = one batched decode), which
+keeps tests and benchmarks deterministic; the launcher maps wall-clock
+arrivals onto steps.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Optional
+
+from .cache import BlockAllocator
+
+
+@dataclass
+class Request:
+    """One serving request: prompt token ids + a decode budget."""
+
+    rid: object
+    prompt: object                   # int sequence / [S] array of token ids
+    max_new_tokens: int
+    arrival: int = 0                 # engine step at which the request exists
+    eos_id: Optional[int] = None     # stop early when this token is emitted
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+
+@dataclass
+class ActiveSlot:
+    """A request bound to a decode lane."""
+
+    request: Request
+    slot: int
+    admitted_at: int
+    tokens: list = field(default_factory=list)   # generated token ids
+
+    @property
+    def n_generated(self) -> int:
+        return len(self.tokens)
+
+    @property
+    def position(self) -> int:
+        """Absolute position of the next token to be decoded."""
+        return self.request.prompt_len + self.n_generated
+
+    def is_finished(self) -> bool:
+        if self.n_generated >= self.request.max_new_tokens:
+            return True
+        eos = self.request.eos_id
+        return eos is not None and self.tokens and self.tokens[-1] == eos
+
+
+class SlotScheduler:
+    """FCFS admission of queued requests into free batch slots."""
+
+    def __init__(self, n_slots: int, allocator: BlockAllocator, kv_len: int):
+        self.n_slots = n_slots
+        self.allocator = allocator
+        self.kv_len = kv_len
+        self._free_slots: list[int] = list(range(n_slots - 1, -1, -1))
+        self._pending: deque[Request] = deque()
+        self.active: dict[int, ActiveSlot] = {}
+        self.finished: list[ActiveSlot] = []
+        # slot -> number of requests that have occupied it (reuse accounting)
+        self.slot_admissions: dict[int, int] = {s: 0 for s in range(n_slots)}
+
+    # -- intake -----------------------------------------------------------------
+    def submit(self, request: Request) -> None:
+        worst = request.prompt_len + request.max_new_tokens
+        if worst > self.kv_len:
+            raise ValueError(
+                f"request {request.rid!r}: prompt {request.prompt_len} + "
+                f"max_new {request.max_new_tokens} exceeds kv_len {self.kv_len}")
+        if request.max_new_tokens < 1:
+            raise ValueError(f"request {request.rid!r}: max_new_tokens < 1")
+        if request.prompt_len < 1:
+            raise ValueError(f"request {request.rid!r}: empty prompt")
+        self._pending.append(request)
+
+    # -- admission ---------------------------------------------------------------
+    def admit(self, now: int) -> list[ActiveSlot]:
+        """Admit arrived requests into free slots, FCFS, until the first one
+        that has not arrived yet or does not fit. Prefill blocks (prompt + the
+        first generated token) are allocated here; decode growth is lazy."""
+        admitted: list[ActiveSlot] = []
+        while self._pending and self._free_slots:
+            req = self._pending[0]
+            if req.arrival > now:
+                break
+            if not self.allocator.can_allocate(req.prompt_len + 1):
+                break
+            self._pending.popleft()
+            slot = self._free_slots.pop()
+            self.allocator.allocate(slot, req.prompt_len + 1)
+            act = ActiveSlot(request=req, slot=slot, admitted_at=now)
+            self.active[slot] = act
+            self.slot_admissions[slot] += 1
+            admitted.append(act)
+        return admitted
+
+    # -- completion ---------------------------------------------------------------
+    def finish(self, slot: int) -> ActiveSlot:
+        """Retire the request in ``slot``; reclaims its cache blocks and frees
+        the lane for the next admission."""
+        act = self.active.pop(slot)
+        self.allocator.free_slot(slot)
+        self._free_slots.append(slot)
+        self.finished.append(act)
+        return act
+
+    # -- queries -------------------------------------------------------------------
+    def has_work(self) -> bool:
+        return bool(self._pending or self.active)
+
+    def n_pending(self) -> int:
+        return len(self._pending)
+
+    def next_arrival(self) -> Optional[int]:
+        """Arrival step of the queue head (None when empty). Admission is
+        strict FCFS, so the head's arrival is the earliest step at which any
+        admission can happen — jumping to the minimum over all pending
+        requests could land short and spin."""
+        return self._pending[0].arrival if self._pending else None
+
+    def max_slot_reuse(self) -> int:
+        return max(self.slot_admissions.values(), default=0)

@@ -65,8 +65,10 @@ def test_restore_specific_step(tmp_path):
                                np.asarray(e1["params"]["w"]))
 
 
+@pytest.mark.slow
 def test_restore_with_shardings_single_device(tmp_path):
-    """Reshard path: device_put against explicit shardings on restore."""
+    """Reshard path: device_put against explicit shardings on restore.
+    Integration tier (exercises the jax mesh/sharding surface)."""
     from jax.sharding import NamedSharding, PartitionSpec as P
     mesh = jax.make_mesh((1,), ("data",),
                          axis_types=(jax.sharding.AxisType.Auto,))

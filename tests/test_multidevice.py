@@ -13,6 +13,10 @@ import textwrap
 
 import pytest
 
+# subprocess dry-runs over 8 forced host devices: integration tier, excluded
+# from the fast CI selection (-m "not slow")
+pytestmark = pytest.mark.slow
+
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

@@ -1,10 +1,18 @@
-"""Optimizer substrate: AdamW, schedules, clipping, int8-EF compression."""
+"""Optimizer substrate: AdamW, schedules, clipping, int8-EF compression.
+
+Only the property-based test needs hypothesis; the plain unit tests must
+keep running on a clean environment."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.optim import (AdamWConfig, clip_by_global_norm, constant,
                          init_state, warmup_cosine, wsd)
@@ -51,19 +59,24 @@ def test_schedules_shape():
     assert float(constant(1e-4)(123)) == pytest.approx(1e-4)
 
 
-@given(st.integers(0, 1000))
-@settings(max_examples=20, deadline=None)
-def test_compression_error_feedback_bounded(seed):
-    """Quantize-with-EF: residual error stays bounded by one quant step."""
-    key = jax.random.PRNGKey(seed)
-    g = {"w": jax.random.normal(key, (64,)) * 10.0}
-    err = compression.init_error_state(g)
-    q, scales, new_err = compression.compress(g, err)
-    deq = compression.decompress(q, scales)
-    resid = float(jnp.max(jnp.abs(deq["w"] + new_err["w"] - g["w"])))
-    assert resid < 1e-4  # deq + error == original (exact bookkeeping)
-    assert q["w"].dtype == jnp.int8
-    assert float(jnp.max(jnp.abs(new_err["w"]))) <= float(scales["w"]) + 1e-6
+if HAVE_HYPOTHESIS:
+    @given(st.integers(0, 1000))
+    @settings(max_examples=20, deadline=None)
+    def test_compression_error_feedback_bounded(seed):
+        """Quantize-with-EF: residual error stays bounded by one quant step."""
+        key = jax.random.PRNGKey(seed)
+        g = {"w": jax.random.normal(key, (64,)) * 10.0}
+        err = compression.init_error_state(g)
+        q, scales, new_err = compression.compress(g, err)
+        deq = compression.decompress(q, scales)
+        resid = float(jnp.max(jnp.abs(deq["w"] + new_err["w"] - g["w"])))
+        assert resid < 1e-4  # deq + error == original (exact bookkeeping)
+        assert q["w"].dtype == jnp.int8
+        assert float(jnp.max(jnp.abs(new_err["w"]))) <= float(scales["w"]) + 1e-6
+else:
+    @pytest.mark.skip(reason="property test needs hypothesis")
+    def test_compression_error_feedback_bounded():
+        pass
 
 
 def test_compression_accumulates_small_signals():

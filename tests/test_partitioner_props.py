@@ -1,6 +1,12 @@
-"""Property-based tests (hypothesis) for partitioner invariants."""
+"""Property-based tests (hypothesis) for partitioner invariants.
 
-import hypothesis
+Hypothesis-free invariants live in test_partitioner_invariants.py, which
+runs on a clean environment."""
+
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (CostModel, balance_stats, block_partition, cut_bytes,

@@ -1,0 +1,204 @@
+"""Continuous-batching serve subsystem: scheduler/allocator behaviour and
+token-identity of the engine against per-request greedy decoding."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get
+from repro.models import lm
+from repro.serve import (BlockAllocator, CacheConfig, ContinuousEngine,
+                         Engine, Request, SlotScheduler)
+
+
+# =============================================================================
+# allocator (pure host logic)
+# =============================================================================
+
+def test_allocator_alloc_extend_free_roundtrip():
+    a = BlockAllocator(CacheConfig(block_size=4, n_blocks=8))
+    blocks = a.allocate(slot=0, n_tokens=6)          # 2 blocks
+    assert len(blocks) == 2 and a.n_in_use == 2
+    assert a.extend(0, 8) == []                      # still fits in 2 blocks
+    assert len(a.extend(0, 9)) == 1                  # crosses a boundary
+    assert a.pressure() == pytest.approx(3 / 8)
+    assert a.free_slot(0) == 3
+    a.check_no_leaks()
+
+
+def test_allocator_rejects_over_capacity_and_double_ops():
+    a = BlockAllocator(CacheConfig(block_size=4, n_blocks=2))
+    assert not a.can_allocate(9)
+    with pytest.raises(MemoryError):
+        a.allocate(0, 9)
+    a.allocate(0, 8)
+    with pytest.raises(ValueError):
+        a.allocate(0, 1)                             # slot already allocated
+    with pytest.raises(MemoryError):
+        a.extend(0, 9)                               # pool exhausted
+    a.free_slot(0)
+    with pytest.raises(KeyError):
+        a.free_slot(0)                               # double free
+    a.check_no_leaks()
+
+
+# =============================================================================
+# scheduler (pure host logic)
+# =============================================================================
+
+def _sched(n_slots=2, block_size=4, n_blocks=16, kv_len=32):
+    return SlotScheduler(n_slots, BlockAllocator(
+        CacheConfig(block_size, n_blocks)), kv_len)
+
+
+def test_fcfs_admission_respects_arrival_and_slots():
+    s = _sched(n_slots=2)
+    for i in range(3):
+        s.submit(Request(rid=i, prompt=[1, 2, 3], max_new_tokens=4,
+                         arrival=i))
+    assert [a.request.rid for a in s.admit(0)] == [0]     # only r0 arrived
+    assert [a.request.rid for a in s.admit(1)] == [1]     # slots now full
+    assert s.admit(2) == []                               # r2 waits for a slot
+    slot_of_r0 = next(sl for sl, a in s.active.items() if a.request.rid == 0)
+    s.finish(slot_of_r0)
+    admitted = s.admit(2)
+    assert [a.request.rid for a in admitted] == [2]       # reuses freed slot
+    assert s.max_slot_reuse() == 2
+
+
+def test_admission_gated_on_cache_capacity():
+    # pool of 2 blocks x 4 tokens; each prompt needs 2 blocks (5+1 tokens)
+    s = _sched(n_slots=2, block_size=4, n_blocks=2)
+    s.submit(Request(rid="a", prompt=[0] * 5, max_new_tokens=2))
+    s.submit(Request(rid="b", prompt=[0] * 5, max_new_tokens=2))
+    assert [a.request.rid for a in s.admit(0)] == ["a"]   # no blocks for b
+    slot = next(iter(s.active))
+    s.finish(slot)
+    assert [a.request.rid for a in s.admit(0)] == ["b"]   # blocks reclaimed
+    s.finish(next(iter(s.active)))
+    s.allocator.check_no_leaks()
+
+
+def test_submit_rejects_requests_exceeding_kv_len():
+    s = _sched(kv_len=8)
+    with pytest.raises(ValueError):
+        s.submit(Request(rid=0, prompt=[0] * 6, max_new_tokens=4))
+
+
+def test_submit_rejects_empty_prompt_and_zero_budget():
+    s = _sched()
+    with pytest.raises(ValueError):
+        s.submit(Request(rid=0, prompt=[], max_new_tokens=4))
+    with pytest.raises(ValueError):
+        s.submit(Request(rid=1, prompt=[1, 2], max_new_tokens=0))
+
+
+def test_next_arrival_follows_fcfs_head():
+    """Admission is strict FCFS, so the idle jump must target the queue
+    head's arrival, not the minimum over all pending requests."""
+    s = _sched()
+    s.submit(Request(rid=0, prompt=[1], max_new_tokens=1, arrival=1000))
+    s.submit(Request(rid=1, prompt=[1], max_new_tokens=1, arrival=5))
+    assert s.next_arrival() == 1000
+
+
+def test_engine_rid_uniqueness():
+    cfg = get("paper-mlp").reduced()
+    eng = ContinuousEngine(cfg, params={}, kv_len=16, n_slots=1)
+    assert eng.submit([1, 2], max_new_tokens=1, rid=0) == 0
+    assert eng.submit([1, 2], max_new_tokens=1) == 1   # auto id skips 0
+    with pytest.raises(ValueError):
+        eng.submit([1, 2], max_new_tokens=1, rid=0)    # duplicate
+
+
+# =============================================================================
+# engine: token identity, slot reuse, reclamation
+# =============================================================================
+
+@pytest.mark.parametrize("arch", ["paper-mlp", "tinyllama-1.1b"])
+def test_continuous_matches_per_request_greedy(arch):
+    """Staggered arrivals, mixed prompt lengths and budgets, more requests
+    than slots: every request's tokens equal its own B=1 greedy decode."""
+    cfg = get(arch).reduced()
+    key = jax.random.PRNGKey(0)
+    params = lm.init_params(cfg, key, jnp.float32)
+    kv_len = 48
+    prompts = [jax.random.randint(jax.random.fold_in(key, i),
+                                  (5 + i % 3,), 0, cfg.vocab_size)
+               for i in range(5)]
+    budgets = [4 + i % 3 for i in range(5)]
+
+    eng = ContinuousEngine(cfg, params, kv_len=kv_len, n_slots=2)
+    for i, p in enumerate(prompts):
+        eng.submit(p, max_new_tokens=budgets[i], rid=i, arrival=i)
+    results = eng.run()
+
+    ref = Engine(cfg, params, kv_len=kv_len)
+    for i, p in enumerate(prompts):
+        expect = ref.generate(p[None], max_new_tokens=budgets[i])[0].tolist()
+        assert results[i] == expect, (arch, i)
+    eng.allocator.check_no_leaks()
+    assert eng.scheduler.max_slot_reuse() >= 2
+
+
+def test_slot_reuse_after_eos_and_truncation():
+    """A request hitting its EOS frees the slot early; the next queued
+    request takes it over and still decodes its own reference tokens."""
+    cfg = get("paper-mlp").reduced()
+    key = jax.random.PRNGKey(1)
+    params = lm.init_params(cfg, key, jnp.float32)
+    prompts = [jax.random.randint(jax.random.fold_in(key, 10 + i), (6,), 0,
+                                  cfg.vocab_size) for i in range(2)]
+    ref = Engine(cfg, params, kv_len=48)
+    ref_toks = [ref.generate(p[None], max_new_tokens=8)[0].tolist()
+                for p in prompts]
+
+    eos = ref_toks[0][2]   # request 0 stops after its 3rd token
+    eng = ContinuousEngine(cfg, params, kv_len=48, n_slots=1)
+    eng.submit(prompts[0], max_new_tokens=8, rid=0, eos_id=eos)
+    eng.submit(prompts[1], max_new_tokens=8, rid=1)
+    results = eng.run()
+
+    cut = ref_toks[0].index(eos) + 1
+    assert results[0] == ref_toks[0][:cut]           # truncated at EOS
+    assert results[1] == ref_toks[1]                 # unaffected by reuse
+    assert eng.scheduler.slot_admissions[0] == 2     # slot 0 served both
+    eng.allocator.check_no_leaks()
+
+
+def test_cache_blocks_reclaimed_not_leaked():
+    cfg = get("paper-mlp").reduced()
+    key = jax.random.PRNGKey(2)
+    params = lm.init_params(cfg, key, jnp.float32)
+    eng = ContinuousEngine(cfg, params, kv_len=32, n_slots=2, block_size=8)
+    for i in range(4):
+        prompt = jax.random.randint(jax.random.fold_in(key, i), (6,), 0,
+                                    cfg.vocab_size)
+        eng.submit(prompt, max_new_tokens=5, rid=i, arrival=i)
+    eng.run()
+    assert eng.telemetry.peak_cache_pressure() > 0   # cache was exercised
+    assert eng.allocator.n_free == eng.allocator.n_blocks
+    assert eng.allocator.tables == {}
+    eng.allocator.check_no_leaks()
+
+
+def test_prefill_only_request_is_counted_in_telemetry():
+    """A request finishing at prefill (max_new=1) with no decode following
+    must still appear in the telemetry token counts."""
+    cfg = get("paper-mlp").reduced()
+    key = jax.random.PRNGKey(3)
+    params = lm.init_params(cfg, key, jnp.float32)
+    eng = ContinuousEngine(cfg, params, kv_len=16, n_slots=2)
+    prompt = jax.random.randint(key, (4,), 0, cfg.vocab_size)
+    eng.submit(prompt, max_new_tokens=1, rid=0)
+    results = eng.run()
+    assert len(results[0]) == 1
+    assert eng.telemetry.total_tokens() == 1
+    assert eng.now == 1                      # the prefill consumed a step
+    eng.allocator.check_no_leaks()
+
+
+def test_engine_rejects_frontend_archs():
+    cfg = get("phi-3-vision-4.2b").reduced()
+    with pytest.raises(NotImplementedError):
+        ContinuousEngine(cfg, params={}, kv_len=16)

@@ -12,6 +12,11 @@ from repro.models import lm
 from repro.optim import init_state, warmup_cosine
 from repro.serve import Engine
 from repro.train import TrainStepConfig, make_train_step
+import pytest
+
+# end-to-end training/restart loops: integration tier, excluded from the
+# fast CI selection (-m "not slow")
+pytestmark = pytest.mark.slow
 
 
 def test_training_reduces_loss_on_stream():
