@@ -1,5 +1,6 @@
 """Serving throughput: static-batch Engine vs continuous-batching engine
-under staggered request arrivals.
+under staggered request arrivals, plus paged-vs-dense and
+bucketed-vs-unbucketed comparisons.
 
 Methodology: a trace of ``n_requests`` requests arrives one every
 ``stagger`` engine steps (one step = one batched decode).  The continuous
@@ -10,11 +11,19 @@ run the real jitted compute; waiting time is charged in measured decode-step
 units, so the comparison isolates the scheduling effect (batch-formation and
 straggler stalls) the paper's runtime assistants are motivated by.
 
-    PYTHONPATH=src python -m benchmarks.serve_throughput
+``run_paged`` replays one trace through the dense (accounting-only) and
+physical paged regimes — same tokens by construction — and reports per-step
+decode latency plus physical residency.  ``run_bucketed`` replays a
+mixed-prompt-length trace with and without power-of-two prefill bucketing
+and reports the prefill compile counts (the quantity bucketing bounds).
+
+    PYTHONPATH=src python -m benchmarks.serve_throughput            # full
+    PYTHONPATH=src python -m benchmarks.serve_throughput --smoke    # CI
 """
 
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -59,7 +68,8 @@ def run(arch: str = "tinyllama-1.1b", n_requests: int = 12, n_slots: int = 4,
     tel = cont.telemetry
     # the step-time unit for arrival conversion: pure decode steps only
     # (prefill-bearing steps would overstate the trace's time scale)
-    decode_steps = [s.seconds for s in tel.steps if not s.prefills]
+    decode_steps = [s.seconds for s in tel.steps
+                    if not s.prefills and not s.prefill_chunks]
     step_s = max(1e-9, sum(decode_steps) / max(1, len(decode_steps)))
     # makespan: measured seconds of every executed step (prefills included)
     # plus idle arrival gaps the engine jumped over, in decode-step units
@@ -110,12 +120,111 @@ def run(arch: str = "tinyllama-1.1b", n_requests: int = 12, n_slots: int = 4,
     return rows
 
 
-def main() -> None:
+def _run_continuous(cfg, params, prompts, budgets, kv_len, n_slots,
+                    stagger, name, **engine_kw) -> dict:
+    """Drive one continuous-engine trace; returns a result row."""
+    eng = ContinuousEngine(cfg, params, kv_len=kv_len, n_slots=n_slots,
+                           **engine_kw)
+    eng.submit(prompts[0], max_new_tokens=2, rid="warmup")   # compile warmup
+    eng.run()
+    eng.telemetry.reset()
+    base = eng.now
+    for i, p in enumerate(prompts):
+        eng.submit(p, max_new_tokens=budgets[i], rid=i,
+                   arrival=base + i * stagger)
+    t0 = time.perf_counter()
+    results = eng.run()
+    wall = time.perf_counter() - t0
+    tel = eng.telemetry
+    total = sum(len(v) for v in results.values())
+    decode_steps = [s.seconds for s in tel.steps
+                    if not s.prefills and not s.prefill_chunks]
+    step_ms = (sum(decode_steps) / max(1, len(decode_steps))) * 1e3
+    eng.allocator.check_no_leaks()
+    return {"name": name, "results": results,
+            "us_per_call": wall * 1e6 / max(1, total),
+            "tok_per_sec": total / max(wall, 1e-9),
+            "decode_step_ms": step_ms,
+            "prefill_compiles": eng.prefill_compiles(),
+            "peak_resident_kib": tel.peak_resident_bytes() / 1024,
+            "occupancy": tel.occupancy(),
+            "cache_pressure": tel.peak_cache_pressure()}
+
+
+def run_paged(arch: str = "tinyllama-1.1b", n_requests: int = 8,
+              n_slots: int = 4, stagger: int = 2,
+              kv_len: int = 64) -> list[dict]:
+    """Dense (accounting-only) vs physical paged KV cache on one trace.
+
+    Tokens are identical by construction (both regimes are exact); the
+    comparison is decode-step latency and what the telemetry can see —
+    the paged rows report real block residency, the dense rows report 0.
+    """
+    cfg = get(arch).reduced()
+    key = jax.random.PRNGKey(0)
+    params = lm.init_params(cfg, key, jnp.float32)
+    prompts = _trace(key, cfg, n_requests, prompt_len=8)
+    budgets = [(8, 16, 24, 32)[i % 4] for i in range(n_requests)]
+
+    dense = _run_continuous(cfg, params, prompts, budgets, kv_len, n_slots,
+                            stagger, f"serve_dense_{arch}")
+    paged = _run_continuous(cfg, params, prompts, budgets, kv_len, n_slots,
+                            stagger, f"serve_paged_{arch}", paged=True)
+    assert dense.pop("results") == paged.pop("results"), \
+        "paged regime diverged from dense tokens"
+    return [dense, paged]
+
+
+def run_bucketed(arch: str = "tinyllama-1.1b", n_requests: int = 10,
+                 n_slots: int = 4, stagger: int = 1,
+                 kv_len: int = 64) -> list[dict]:
+    """Unbucketed vs bucketed prefill over mixed prompt lengths: bucketing
+    bounds the prefill compile count by the bucket count."""
+    cfg = get(arch).reduced()
+    key = jax.random.PRNGKey(1)
+    params = lm.init_params(cfg, key, jnp.float32)
+    lens = [3 + (5 * i) % 17 for i in range(n_requests)]     # many lengths
+    prompts = [jax.random.randint(jax.random.fold_in(key, i), (lens[i],), 0,
+                                  cfg.vocab_size) for i in range(n_requests)]
+    budgets = [6] * n_requests
+
+    plain = _run_continuous(cfg, params, prompts, budgets, kv_len, n_slots,
+                            stagger, f"serve_unbucketed_{arch}")
+    bucketed = _run_continuous(cfg, params, prompts, budgets, kv_len,
+                               n_slots, stagger, f"serve_bucketed_{arch}",
+                               bucket_prompts=True)
+    assert plain.pop("results") == bucketed.pop("results"), \
+        "bucketed prefill diverged from unbucketed tokens"
+    return [plain, bucketed]
+
+
+def _print_rows(rows: list[dict]) -> None:
+    for r in rows:
+        derived = ";".join(
+            f"{k}={v:.2f}" if isinstance(v, float) else f"{k}={v}"
+            for k, v in r.items() if k not in ("name", "us_per_call"))
+        print(f"{r['name']},{r['us_per_call']:.0f},{derived}")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny trace on paper-mlp (CI: keeps the benchmark "
+                         "importable and the engine paths exercised)")
+    args = ap.parse_args(argv)
     print("name,us_per_call,derived")
+    if args.smoke:
+        _print_rows(run_paged("paper-mlp", n_requests=3, n_slots=2,
+                              kv_len=48))
+        _print_rows(run_bucketed("paper-mlp", n_requests=4, n_slots=2,
+                                 kv_len=48))
+        return
     for r in run():
         print(f"{r['name']},{r['us_per_call']:.0f},"
               f"tok_s={r['tok_per_sec']:.1f};makespan={r['makespan_s']:.2f}s;"
               f"occ={r['occupancy']:.2f}")
+    _print_rows(run_paged())
+    _print_rows(run_bucketed())
 
 
 if __name__ == "__main__":

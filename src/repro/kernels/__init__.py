@@ -1,3 +1,12 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernel packages, one per compute hot-spot.
+
+Layout convention (see docs/kernels.md): each package holds ``<name>.py``
+(the Pallas kernel), ``ref.py`` (a pure-jnp oracle with identical
+semantics), and ``ops.py`` (the jit'd public wrapper deciding Pallas vs
+interpret mode vs oracle fallback per call).
+
+Packages: ``flash_attention`` (fused train/prefill attention),
+``paged_attention`` (block-table decode attention over the physical paged
+KV cache), ``ssd_scan`` (Mamba-2 chunked scan), ``rglru_scan`` (Griffin
+gated linear recurrence).
+"""

@@ -1,2 +1,9 @@
+"""Fused flash attention: TPU Pallas kernel + jnp oracle.
+
+``flash_attention(q, k, v, q_positions=, k_positions=, ...)`` with
+q [B, Sq, H, hd], k/v [B, Skv, KV, hd]; GQA, position-based causal and
+sliding-window masking, logit softcap. See docs/kernels.md.
+"""
+
 from .ops import flash_attention
 from .ref import reference

@@ -1,0 +1,2 @@
+from .ops import paged_attention
+from .ref import reference

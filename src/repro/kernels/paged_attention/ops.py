@@ -1,0 +1,45 @@
+"""Jit'd public wrapper for the paged-attention decode kernel.
+
+On TPU the Pallas kernel runs natively; elsewhere it runs in interpret mode
+(the kernel body executes on CPU — used by the correctness sweeps).  Lanes
+whose head grouping does not divide evenly fall back to the gather-based
+jnp oracle.  The oracle is also the path the serving engine uses off-TPU:
+its arithmetic is bitwise-identical to the dense cache path, which the
+engine's token-identity guarantee depends on (the online-softmax kernel is
+only tolerance-close).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from . import ref
+from .paged_attention import paged_attention_fwd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("logit_softcap", "interpret"))
+def paged_attention(q, k_pages, v_pages, block_tables, context_lens, *,
+                    logit_softcap=0.0, interpret=None):
+    """Single-token decode attention through a block table.
+
+    q: [B, H, hd]; k_pages/v_pages: [n_pages, block_size, KV, hd];
+    block_tables: [B, max_blocks]; context_lens: [B]. Returns [B, H, hd].
+    """
+    B, H, hd = q.shape
+    KV = k_pages.shape[2]
+    if H % KV:
+        return ref.reference(
+            q[:, None], k_pages, v_pages, block_tables, context_lens,
+            q_positions=(context_lens - 1)[:, None],
+            logit_softcap=logit_softcap)[:, 0]
+    if interpret is None:
+        interpret = not _on_tpu()
+    return paged_attention_fwd(
+        q, k_pages, v_pages, block_tables, context_lens,
+        logit_softcap=logit_softcap, interpret=interpret)

@@ -1,0 +1,132 @@
+"""Paged decode attention — Pallas TPU kernel.
+
+vLLM-style paged attention (single query token per lane against a
+block-granular physical KV cache) mapped onto TPU the same way the
+``flash_attention`` kernel is, with the block table doing the address
+translation:
+
+* Grid = (batch, q_heads, kv_blocks); the kv-block dimension is innermost
+  and sequential on TPU, so the online-softmax m/l/acc scratch carries
+  across physical blocks for a fixed (b, h).
+* The block table and context lengths are **scalar-prefetch** operands
+  (``pltpu.PrefetchScalarGridSpec``): the k/v BlockSpec ``index_map`` reads
+  ``tables[b, i]`` to DMA logical block i of lane b from wherever it
+  physically lives in the ``[n_pages, block_size, KV, hd]`` pool — the
+  gather never materializes a dense per-lane KV view.
+* GQA maps q head -> kv head in the index_map (``h // group``), and tokens
+  past ``context_lens[b]`` are masked to -1e30 inside the kernel, so padded
+  table tails (null blocks) contribute exact zeros.
+
+The query tile is a single row ([1, hd]); decode is bandwidth-bound on the
+KV stream, so the tiny MXU tile is the right trade.  Validated on CPU with
+interpret=True against ``ref.reference`` (tests/test_kernels_paged_attention.py).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref,
+            *, scale: float, block_size: int, logit_softcap: float,
+            n_kv_blocks: int):
+    b = pl.program_id(0)
+    ib = pl.program_id(2)
+
+    @pl.when(ib == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0, :][None, :]              # [1, hd]
+    k = k_ref[0, :, 0, :]                    # [bs, hd]
+    v = v_ref[0, :, 0, :]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale      # [1, bs]
+    if logit_softcap:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+
+    # token j of this physical block sits at logical position ib*bs + j;
+    # only positions below the lane's context length are resident
+    pos = ib * block_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_size), 1)
+    mask = pos < lens_ref[b]
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                      # [1]
+    m_cur = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # fully-masked-so-far rows keep m = NEG_INF; make the rescale a no-op
+    alpha = jnp.where(m_prev == NEG_INF, 0.0, jnp.exp(m_prev - m_new))
+    alpha = jnp.where(m_new == NEG_INF, 1.0, alpha)
+    p = jnp.exp(s - jnp.where(m_new == NEG_INF, 0.0, m_new)[:, None])
+    p = jnp.where(mask, p, 0.0)
+
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1)
+    acc_ref[...] = alpha[:, None] * acc_ref[...] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ib == n_kv_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0, :] = (acc_ref[...] / denom)[0].astype(o_ref.dtype)
+
+
+def paged_attention_fwd(q, k_pages, v_pages, block_tables, context_lens, *,
+                        logit_softcap: float = 0.0,
+                        interpret: bool = False) -> jax.Array:
+    """q: [B, H, hd]; k_pages/v_pages: [n_pages, bs, KV, hd];
+    block_tables: [B, max_blocks]; context_lens: [B]. Returns [B, H, hd]."""
+    B, H, hd = q.shape
+    n_pages, bs, KV, _ = k_pages.shape
+    assert H % KV == 0, (H, KV)
+    group = H // KV
+    max_blocks = block_tables.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, block_size=bs, logit_softcap=logit_softcap,
+        n_kv_blocks=max_blocks)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,               # block_tables, context_lens
+        grid=(B, H, max_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, hd),
+                         lambda b, h, ib, tables, lens: (b, h, 0)),  # q
+            pl.BlockSpec((1, bs, 1, hd),                              # k
+                         lambda b, h, ib, tables, lens:
+                         (tables[b, ib], 0, h // group, 0)),
+            pl.BlockSpec((1, bs, 1, hd),                              # v
+                         lambda b, h, ib, tables, lens:
+                         (tables[b, ib], 0, h // group, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd),
+                               lambda b, h, ib, tables, lens: (b, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),        # running max
+            pltpu.VMEM((1,), jnp.float32),        # running sum
+            pltpu.VMEM((1, hd), jnp.float32),     # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), context_lens.astype(jnp.int32),
+      q, k_pages, v_pages)

@@ -1,0 +1,57 @@
+"""Pure-jnp oracle for paged (block-table) attention.
+
+Reconstructs each lane's logical KV sequence by gathering physical cache
+blocks through its block table, then runs exactly the same masked-softmax
+arithmetic as ``repro.models.blocks._attn_block``.  Because invalid rows
+(beyond ``context_lens`` or failing the causal test) are forced to the same
+-1e30 sentinel before the f32 softmax, their probabilities underflow to an
+exact ``0.0`` — so the output is *bitwise identical* to dense attention over
+the same resident tokens.  The continuous-batching engine relies on that for
+token identity with the static ``Engine`` oracle.
+
+Shape conventions (see docs/kernels.md):
+
+* ``q``:            [B, Sq, H, hd]   (decode: Sq == 1; chunked prefill: Sq == chunk)
+* ``k_pages/v_pages``: [n_pages, block_size, KV, hd] physical block pool
+  (page ``n_pages - 1`` is conventionally the null/scratch block)
+* ``block_tables``: [B, max_blocks] int32 — logical block i of lane b lives
+  in physical page ``block_tables[b, i]``
+* ``context_lens``: [B] int32 — resident tokens per lane, *including* any
+  token written this step
+* ``q_positions``:  [B, Sq] absolute positions of the query tokens
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def reference(q, k_pages, v_pages, block_tables, context_lens, *,
+              q_positions, logit_softcap=0.0):
+    """Gather-based paged attention. Returns [B, Sq, H, hd]."""
+    B, Sq, H, hd = q.shape
+    n_pages, block_size, n_kv, _ = k_pages.shape
+    L = block_tables.shape[1] * block_size
+
+    # [B, max_blocks, bs, KV, hd] -> [B, L, KV, hd]: logical order 0..L-1
+    k = k_pages[block_tables].reshape(B, L, n_kv, hd)
+    v = v_pages[block_tables].reshape(B, L, n_kv, hd)
+    if n_kv != H:
+        k = jnp.repeat(k, H // n_kv, axis=2)
+        v = jnp.repeat(v, H // n_kv, axis=2)
+
+    scale = 1.0 / math.sqrt(hd)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if logit_softcap:
+        scores = logit_softcap * jnp.tanh(scores / logit_softcap)
+    j = jnp.arange(L, dtype=jnp.int32)
+    # resident (j < context_len) AND causal (j <= q_pos), per lane
+    mask = (j[None, None, :] < context_lens[:, None, None]) & \
+        (j[None, None, :] <= q_positions[:, :, None])          # [B, Sq, L]
+    scores = jnp.where(mask[:, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)

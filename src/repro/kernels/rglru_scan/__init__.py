@@ -1,2 +1,8 @@
+"""RG-LRU gated linear recurrence: TPU Pallas kernel + jnp oracle.
+
+``rglru_scan(a, bx)`` with a/bx [B, S, W] -> (h [B, S, W], h_final
+[B, W]), h_t = a_t * h_{t-1} + bx_t per channel. See docs/kernels.md.
+"""
+
 from .ops import rglru_scan
 from .ref import reference

@@ -1,4 +1,10 @@
-"""Jit'd public wrapper for the RG-LRU scan kernel."""
+"""Jit'd public wrapper for the RG-LRU scan kernel.
+
+On TPU the Pallas kernel runs natively; elsewhere it runs in interpret mode
+(the kernel body executes on CPU — used by the correctness sweeps against
+``ref.reference``).  a, bx: [B, S, W] gates and gated inputs; returns
+(h [B, S, W], h_final [B, W]) with h_t = a_t * h_{t-1} + bx_t.
+"""
 
 from __future__ import annotations
 

@@ -1,2 +1,9 @@
+"""Mamba-2 SSD chunked scan: TPU Pallas kernel + jnp oracle.
+
+``ssd_scan(x, dt, A, B, C, D)`` with x [B, S, nh, hd], dt [B, S, nh],
+A/D [nh], B/C [B, S, ns] -> (y [B, S, nh, hd], state [B, nh, hd, ns]).
+See docs/kernels.md.
+"""
+
 from .ops import ssd_scan
 from .ref import reference

@@ -1,4 +1,11 @@
-"""Jit'd public wrapper for the SSD scan kernel (interpret mode off-TPU)."""
+"""Jit'd public wrapper for the SSD scan kernel.
+
+On TPU the Pallas kernel runs natively; elsewhere it runs in interpret mode
+(the kernel body executes on CPU — used by the correctness sweeps against
+``ref.reference``).  xs: [B, S, nh, hd]; dt: [B, S, nh] (post-softplus);
+A: [nh] (negative); B_mat/C_mat: [B, S, ns]; D: [nh].  Returns
+(y [B, S, nh, hd], final inter-chunk state [B, nh, hd, ns]).
+"""
 
 from __future__ import annotations
 

@@ -48,6 +48,9 @@ def _static(args, cfg, params, key):
 def _continuous(args, cfg, params, key):
     eng = ContinuousEngine(cfg, params, kv_len=args.kv_len,
                            n_slots=args.batch,
+                           paged=args.paged,
+                           bucket_prompts=args.bucket,
+                           prefill_chunk=args.chunk_prefill,
                            dtype=jnp.float32 if args.reduced else jnp.bfloat16)
     # staggered arrivals: request i becomes admissible at step i * stagger
     for i in range(args.requests):
@@ -68,7 +71,14 @@ def _continuous(args, cfg, params, key):
           f"cache_pressure={tel.cache_pressure():.2f} "
           f"peak={tel.peak_cache_pressure():.2f} "
           f"step={tel.mean_step_ms():.1f}ms "
-          f"slot_reuse={eng.scheduler.max_slot_reuse()}")
+          f"slot_reuse={eng.scheduler.max_slot_reuse()} "
+          f"prefill_compiles={eng.prefill_compiles()}")
+    if args.paged:
+        print(f"[serve-cb] paged: peak_resident="
+              f"{tel.peak_resident_bytes() / 1024:.0f}KiB / "
+              f"{eng.allocator.capacity_bytes() / 1024:.0f}KiB "
+              f"({len(eng.allocator.stores)} layer pools, "
+              f"block_size={eng.block_size})")
     print("first request:", results[0])
 
     if args.adapt:
@@ -101,6 +111,15 @@ def main(argv=None):
                     help="continuous: number of requests in the trace")
     ap.add_argument("--stagger", type=int, default=2,
                     help="continuous: arrival gap between requests, in steps")
+    ap.add_argument("--paged", action="store_true",
+                    help="continuous: physical paged KV cache (block-table "
+                         "decode; all-global-attention archs)")
+    ap.add_argument("--bucket", action="store_true",
+                    help="continuous: pad prefills to power-of-two buckets "
+                         "(bounds prefill compile count)")
+    ap.add_argument("--chunk-prefill", type=int, default=0, metavar="C",
+                    help="continuous+paged: prefill prompts in C-token "
+                         "chunks interleaved with decode")
     ap.add_argument("--adapt", action="store_true",
                     help="feed serve telemetry to the §3 assistants")
     ap.add_argument("--devices", type=int, default=4,

@@ -203,16 +203,65 @@ def init_attn_cache(cfg: ModelConfig, batch: int, kv_len: int, local: bool,
     }
 
 
+def init_paged_attn_cache(cfg: ModelConfig, n_pages: int, block_size: int,
+                          dtype) -> dict:
+    """Physical block-pool cache for one attention layer: K/V page pools
+    shared by every decode lane, addressed through per-lane block tables
+    (``paged_tables``).  ``n_pages`` includes the trailing null/scratch
+    page inactive lanes write into."""
+    shape = (n_pages, block_size, cfg.n_kv_heads, cfg.head_dim)
+    return {"k_pages": jnp.zeros(shape, dtype),
+            "v_pages": jnp.zeros(shape, dtype)}
+
+
+def _paged_write(cache: dict, tables: jax.Array, positions: jax.Array,
+                 k: jax.Array, v: jax.Array) -> dict:
+    """Scatter per-token K/V rows into the page pools through block tables.
+
+    tables: [B, max_blocks]; positions: [B] (decode: one row per lane) or
+    [S] with B == 1 (chunk prefill: the chunk's rows for one lane);
+    k, v: [B, S, KV, hd] with B == len(positions) or S == len(positions).
+    Rows whose table entry is the null page land in scratch (inactive lanes,
+    padded chunk tails) — never read back, because reads are masked by
+    ``context_lens``.
+    """
+    bs = cache["k_pages"].shape[1]
+    width = tables.shape[1]
+    null = cache["k_pages"].shape[0] - 1       # scratch page, by convention
+    blk = positions // bs
+    safe = jnp.minimum(blk, width - 1)         # in-bounds for the gather only
+    off = positions % bs
+    if k.shape[0] == positions.shape[0]:      # decode: one row per lane
+        phys = jnp.take_along_axis(tables, safe[:, None], axis=1)[:, 0]
+        rows_k, rows_v = k[:, 0], v[:, 0]
+    else:                                      # chunk prefill: B == 1
+        phys = tables[0, safe]
+        rows_k, rows_v = k[0], v[0]
+    # positions past the table's reach (pad rows of a final chunk, runaway
+    # inactive lanes) must go to scratch, not the clamped last real block
+    phys = jnp.where(blk < width, phys, null)
+    return {"k_pages": cache["k_pages"].at[phys, off].set(rows_k),
+            "v_pages": cache["v_pages"].at[phys, off].set(rows_v)}
+
+
 def attn_layer(cfg: ModelConfig, p: dict, x: jax.Array, *, local: bool,
                positions: jax.Array, cache: Optional[dict] = None,
                kv_override: Optional[tuple] = None, impl: str = "chunked",
-               unroll: bool = False,
+               unroll: bool = False, paged_tables: Optional[jax.Array] = None,
                shard_fn=None) -> tuple[jax.Array, Optional[dict]]:
     """Pre-norm attention block. Returns (residual output, new cache).
 
     Training/prefill: ``positions`` = [S]; decode: x is [B, 1, D] and
     ``positions`` = [] scalar array of the current position; cache updated.
     ``kv_override`` (k, v, k_positions) implements cross-attention.
+
+    Paged mode (cache holds ``k_pages``/``v_pages`` pools and
+    ``paged_tables`` carries [B, max_blocks] block tables): decode is a
+    *batched* step — x is [B, 1, D] and ``positions`` = [B] per-lane
+    absolute positions; prefill is a per-lane *chunk* — x is [1, C, D] and
+    ``positions`` = [C] the chunk's absolute positions.  Both write K/V
+    into the shared pools through the tables, then attend through the
+    gather-based paged kernel.  Global attention only (gated upstream).
     """
     B, S, _ = x.shape
     window = cfg.window_size if local else 0
@@ -230,6 +279,38 @@ def attn_layer(cfg: ModelConfig, p: dict, x: jax.Array, *, local: bool,
 
     k = sf((h @ p["wk"]).reshape(B, S, cfg.n_kv_heads, cfg.head_dim), "kv_heads")
     v = sf((h @ p["wv"]).reshape(B, S, cfg.n_kv_heads, cfg.head_dim), "kv_heads")
+
+    if cache is not None and "k_pages" in cache:  # physical paged cache
+        assert not window, "paged attention supports global layers only"
+        assert paged_tables is not None, "paged cache needs block tables"
+        if S == 1:  # batched decode: one token per lane, per-lane positions
+            pos = positions.reshape(-1)                       # [B]
+            q = apply_rope(q, pos[:, None], cfg.rope_theta)
+            k = apply_rope(k, pos[:, None], cfg.rope_theta)
+            new_cache = _paged_write(cache, paged_tables, pos, k, v)
+            ctx = pos + 1                  # resident incl. the token just written
+            q_pos = pos[:, None]
+        else:       # chunk prefill: B == 1 lane, S == chunk rows
+            pos = positions.reshape(-1)                       # [S]
+            q = apply_rope(q, pos, cfg.rope_theta)
+            k = apply_rope(k, pos, cfg.rope_theta)
+            new_cache = _paged_write(cache, paged_tables, pos, k, v)
+            ctx = pos[-1][None] + 1
+            q_pos = pos[None]
+        if impl == "pallas" and S == 1:
+            from repro.kernels.paged_attention import ops as pa_ops
+            o = pa_ops.paged_attention(
+                q[:, 0], new_cache["k_pages"], new_cache["v_pages"],
+                paged_tables, ctx,
+                logit_softcap=cfg.attn_logit_softcap)[:, None]
+        else:
+            from repro.kernels.paged_attention import ref as pa_ref
+            o = pa_ref.reference(
+                q, new_cache["k_pages"], new_cache["v_pages"], paged_tables,
+                ctx, q_positions=q_pos,
+                logit_softcap=cfg.attn_logit_softcap)
+        out = sf(o, "heads").reshape(B, S, cfg.q_dim) @ p["wo"]
+        return x + out, new_cache
 
     if cache is None:  # training / prefill-without-cache
         q = apply_rope(q, positions, cfg.rope_theta)

@@ -145,6 +145,93 @@ def write_slot_cache(caches: dict, single: dict, slot) -> dict:
         caches, single)
 
 
+def supports_paged(cfg: ModelConfig) -> bool:
+    """Physical paging (and prompt bucketing / chunked prefill, which rely
+    on position-masked cache validity) is exact only when every mixer is
+    global attention: sliding-window caches evict by position and recurrent
+    (ssd/rglru/mla) state absorbs padded tokens irreversibly."""
+    return all(spec.mixer == "global"
+               for seg in cfg.segments() for spec in seg.cycle)
+
+
+def init_paged_caches(cfg: ModelConfig, n_pages: int, block_size: int,
+                      dtype=jnp.bfloat16) -> dict:
+    """Paged decode cache tree: every attention layer's cache leaf is a
+    shared physical page pool ``[n_pages, block_size, KV, hd]`` (no slot
+    axis — lanes are carved out by block tables), stacked to ``[repeats,
+    ...]`` to mirror the scan segments like ``init_cache``."""
+    if not supports_paged(cfg):
+        raise NotImplementedError(
+            f"{cfg.name}: paged KV caching requires all-global attention "
+            "(local/ssd/rglru/mla layers keep dense per-slot caches)")
+    cache: dict = {}
+    for si, seg in enumerate(cfg.segments()):
+        leaf = blocks.init_paged_attn_cache(cfg, n_pages, block_size, dtype)
+        cache[f"seg{si}"] = {
+            f"c{ci}": jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (seg.repeats,) + x.shape).copy(),
+                {"attn": leaf})
+            for ci in range(len(seg.cycle))
+        }
+    return cache
+
+
+def paged_cache_leaves(caches: dict) -> list[tuple[str, dict]]:
+    """(path, {"k_pages", "v_pages"}) for every paged attention leaf, in
+    deterministic order — the engine binds one ``PagedKVStore`` per leaf."""
+    out: list[tuple[str, dict]] = []
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            if "k_pages" in node:
+                out.append((path, node))
+                return
+            for key in sorted(node):
+                walk(node[key], f"{path}/{key}" if path else key)
+
+    walk(caches, "")
+    return out
+
+
+def insert_paged_prompt(caches: dict, single: dict, table_row: jax.Array,
+                        true_len, *, block_size: int, null_block: int) -> dict:
+    """Scatter a dense single-request prefill cache into the paged pools.
+
+    ``single`` is the ``init_cache(cfg, 1, kv_len)`` tree a full prefill
+    populated; rows ``< true_len`` of each attention leaf are written to the
+    physical blocks named by ``table_row`` (padded bucket rows and unused
+    capacity are redirected to the null page).  The pools' other lanes are
+    untouched, so admission never perturbs running requests."""
+    def walk(c, s):
+        if isinstance(c, dict) and "k_pages" in c:
+            kv_len = s["k"].shape[2]           # [repeats, 1, kv_len, KV, hd]
+            rows = jnp.arange(kv_len)
+            blk = jnp.minimum(rows // block_size, table_row.shape[0] - 1)
+            phys = jnp.where(rows < true_len, table_row[blk], null_block)
+            off = rows % block_size
+            return {"k_pages": c["k_pages"].at[:, phys, off].set(s["k"][:, 0]),
+                    "v_pages": c["v_pages"].at[:, phys, off].set(s["v"][:, 0])}
+        return {key: walk(c[key], s[key]) for key in c}
+
+    return walk(caches, single)
+
+
+def mask_cache_positions(cache: dict, true_len) -> dict:
+    """Invalidate bucket-padding rows after a padded prefill: any attention
+    cache slot holding a position ``>= true_len`` is marked empty (-1), so
+    the pad tokens' K/V can never be attended to.  Exact only for global
+    attention layers (see ``supports_paged``)."""
+    def walk(node):
+        if isinstance(node, dict):
+            if "pos" in node and "k" in node:
+                pos = node["pos"]
+                return {**node, "pos": jnp.where(pos >= true_len, -1, pos)}
+            return {key: walk(val) for key, val in node.items()}
+        return node
+
+    return walk(cache)
+
+
 # =============================================================================
 # forward
 # =============================================================================
@@ -153,7 +240,7 @@ def _apply_layer(cfg: ModelConfig, spec: LayerSpec, p: dict, h, *,
                  positions, cache: Optional[dict], enc_out, impl: str,
                  n_groups: int, capacity_factor: float = 1.25,
                  moe_lossless: bool = False, unroll: bool = False,
-                 shard_fn=None):
+                 paged_tables=None, shard_fn=None):
     """One layer. Returns (h, new_cache_or_None, aux)."""
     aux = jnp.zeros((), jnp.float32)
     new_cache: dict = {}
@@ -163,7 +250,8 @@ def _apply_layer(cfg: ModelConfig, spec: LayerSpec, p: dict, h, *,
                                  local=(spec.mixer == "local"),
                                  positions=positions,
                                  cache=cache.get("attn") if cache else None,
-                                 impl=impl, unroll=unroll, shard_fn=shard_fn)
+                                 impl=impl, unroll=unroll,
+                                 paged_tables=paged_tables, shard_fn=shard_fn)
         if c is not None:
             new_cache["attn"] = c
     elif spec.mixer == "mla":
@@ -218,7 +306,7 @@ def _run_segment(cfg: ModelConfig, seg: Segment, seg_p: dict, h, *,
                  positions, seg_cache, enc_out, impl: str, n_groups: int,
                  remat: bool, capacity_factor: float = 1.25,
                  moe_lossless: bool = False, unroll: bool = False,
-                 shard_fn=None):
+                 paged_tables=None, shard_fn=None):
     def body(carry, xs):
         hh = carry
         ps, cs = xs
@@ -232,7 +320,9 @@ def _run_segment(cfg: ModelConfig, seg: Segment, seg_p: dict, h, *,
                                      n_groups=n_groups,
                                      capacity_factor=capacity_factor,
                                      moe_lossless=moe_lossless,
-                                     unroll=unroll, shard_fn=shard_fn)
+                                     unroll=unroll,
+                                     paged_tables=paged_tables,
+                                     shard_fn=shard_fn)
             aux = aux + a
             if nc is not None:
                 new_cs[f"c{ci}"] = nc
@@ -253,6 +343,7 @@ def forward(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
             n_groups: int = 1, remat: Optional[bool] = None,
             capacity_factor: float = 1.25,
             moe_lossless: Optional[bool] = None,
+            paged_tables: Optional[jax.Array] = None,
             shard_fn=None, unroll: bool = False):
     """Returns (logits, new_cache_or_None, aux_loss).
 
@@ -260,6 +351,9 @@ def forward(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
     positions: [S] absolute positions (decode: scalar array). Defaults to
       arange over the model sequence (frontend tokens first for VLM).
     frontend_emb: [B, F, frontend_dim] stub embeddings (VLM/audio).
+    paged_tables: [B, max_blocks] block tables when ``cache`` is the paged
+      tree from ``init_paged_caches`` (decode: positions is then [B]
+      per-lane; chunk prefill: B == 1, positions the chunk's [S] rows).
     """
     remat = (mode == "train") if remat is None else remat
     decode = mode == "decode"
@@ -324,7 +418,8 @@ def forward(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
             cfg, seg, params[f"seg{si}"], h, positions=positions,
             seg_cache=seg_cache, enc_out=enc_out, impl=impl,
             n_groups=n_groups, remat=remat, capacity_factor=capacity_factor,
-            moe_lossless=moe_lossless, unroll=unroll, shard_fn=shard_fn)
+            moe_lossless=moe_lossless, unroll=unroll,
+            paged_tables=paged_tables, shard_fn=shard_fn)
         h = shard_fn(h, "residual")
         aux_total = aux_total + aux
         if ncs is not None:

@@ -59,8 +59,13 @@ class ServeStep:
     n_slots: int
     blocks_in_use: int
     n_blocks: int
-    prefills: int = 0
+    prefills: int = 0            # prefills *completed* (1 emitted token each)
+    prefill_chunks: int = 0      # chunked-prefill work units this step
     new_tokens: int = 0
+    # physical paged-cache residency (0 when the engine runs the dense
+    # accounting-only regime — see serve.cache.PagedKVStore)
+    resident_bytes: int = 0
+    capacity_bytes: int = 0
 
 
 @dataclass
@@ -87,6 +92,7 @@ class ServeTelemetry:
         self._busy_seconds = 0.0
         self._peak_pressure = 0.0
         self._max_concurrency = 0
+        self._peak_resident_bytes = 0
 
     def reset(self) -> None:
         """Drop all recorded steps and whole-run aggregates."""
@@ -95,20 +101,29 @@ class ServeTelemetry:
         self._busy_seconds = 0.0
         self._peak_pressure = 0.0
         self._max_concurrency = 0
+        self._peak_resident_bytes = 0
 
     def record_step(self, step: int, seconds: float, active_slots,
                     n_slots: int, blocks_in_use: int, n_blocks: int,
-                    prefills: int = 0, new_tokens: int = 0) -> None:
+                    prefills: int = 0, prefill_chunks: int = 0,
+                    new_tokens: int = 0,
+                    resident_bytes: int = 0, capacity_bytes: int = 0) -> None:
         self.steps.append(ServeStep(
             step=step, seconds=seconds, active_slots=tuple(active_slots),
             n_slots=n_slots, blocks_in_use=blocks_in_use, n_blocks=n_blocks,
-            prefills=prefills, new_tokens=new_tokens))
+            prefills=prefills, prefill_chunks=prefill_chunks,
+            new_tokens=new_tokens,
+            resident_bytes=resident_bytes, capacity_bytes=capacity_bytes))
+        # chunk work units are not emitted tokens — only completed prefills
+        # (one greedy token each) and decode tokens count
         self._total_tokens += new_tokens + prefills
         self._busy_seconds += seconds
         if n_blocks:
             self._peak_pressure = max(self._peak_pressure,
                                       blocks_in_use / n_blocks)
         self._max_concurrency = max(self._max_concurrency, len(active_slots))
+        self._peak_resident_bytes = max(self._peak_resident_bytes,
+                                        resident_bytes)
 
     # -- aggregates -----------------------------------------------------------
     def _recent(self) -> list:
@@ -133,6 +148,10 @@ class ServeTelemetry:
 
     def peak_cache_pressure(self) -> float:
         return self._peak_pressure
+
+    def peak_resident_bytes(self) -> int:
+        """Peak physical paged-cache residency (0 in the dense regime)."""
+        return self._peak_resident_bytes
 
     def max_concurrency(self) -> int:
         return self._max_concurrency

@@ -1,3 +1,6 @@
-from .cache import BlockAllocator, CacheConfig
-from .engine import ContinuousEngine, Engine, make_prefill_step, make_serve_step
+from .cache import BlockAllocator, CacheConfig, PagedKVStore
+from .engine import (ContinuousEngine, Engine, bucket_length,
+                     make_bucketed_prefill_step, make_chunk_prefill_step,
+                     make_paged_decode_step, make_prefill_step,
+                     make_serve_step)
 from .scheduler import ActiveSlot, Request, SlotScheduler

@@ -1,22 +1,33 @@
-"""Block (paged) KV-cache accounting for the continuous-batching engine.
+"""Block (paged) KV cache for the continuous-batching engine: the host-side
+``BlockAllocator`` plus the physical ``PagedKVStore``.
 
-The physical decode cache is the dense per-slot tree built by
-``models.lm.init_slot_caches`` — each slot owns a ``kv_len``-capacity lane.
-This module is the *allocator* that governs it, vLLM-style: cache HBM is
-divided into fixed-size blocks, each admitted request owns a per-slot block
-table that grows one block at a time as it decodes, and every block is
-reclaimed when the request finishes (EOS or max-tokens).  The allocator is
-what makes admission control and the cache-pressure telemetry real: the
-scheduler refuses to admit a request whose worst case cannot fit, and
-``ServeTelemetry`` reports ``blocks_in_use / n_blocks`` to the scheduling
-assistants (paper §3) as serving memory pressure.
+vLLM-style paging: cache HBM is divided into fixed-size blocks, each
+admitted request owns a per-slot block table that grows one block at a time
+as it decodes, and every block is reclaimed when the request finishes (EOS
+or max-tokens).  The allocator is what makes admission control and the
+cache-pressure telemetry real: the scheduler refuses to admit a request
+whose worst case cannot fit, and ``ServeTelemetry`` reports
+``blocks_in_use / n_blocks`` (and, with a physical store attached, resident
+HBM bytes) to the scheduling assistants (paper §3) as serving memory
+pressure.
 
-Pure Python, no jax — the allocator runs on the host between device steps.
+Two layers:
+
+* ``BlockAllocator`` — pure host bookkeeping (free list + per-slot block
+  tables); runs between device steps, no jax in the hot path.
+* ``PagedKVStore`` — the physical ``[n_layers, n_blocks + 1, block_size,
+  n_kv_heads, head_dim]`` K/V page pools the tables index into (the extra
+  trailing page is the *null block*: inactive decode lanes and padded table
+  tails point at it, so their writes land harmlessly and their reads are
+  masked).  The engine threads the pools through its jitted steps and
+  rebinds the store afterwards; ``write_token``/``gather_slot`` are the
+  standalone host-side APIs (tests, debugging, residency accounting).
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional
 
 
 @dataclass(frozen=True)
@@ -30,11 +41,94 @@ class CacheConfig:
         """Blocks needed to hold ``n_tokens`` cache entries."""
         return max(0, -(-n_tokens // self.block_size))
 
+    @property
+    def null_block(self) -> int:
+        """Physical id of the scratch page (one past the allocatable pool)."""
+        return self.n_blocks
+
+
+class PagedKVStore:
+    """Physical paged KV storage for a stack of attention layers.
+
+    Owns ``k_pages``/``v_pages`` of shape ``[n_layers, n_blocks + 1,
+    block_size, n_kv_heads, head_dim]``.  Page ``n_blocks`` is the null
+    block (see module docstring).  All updates are functional — methods
+    replace ``self.k_pages``/``self.v_pages`` with the updated arrays, so a
+    store can also be *rebound* to pool arrays produced inside a jitted
+    engine step (``from_pools`` / ``rebind``).
+    """
+
+    def __init__(self, config: CacheConfig, n_layers: int, n_kv_heads: int,
+                 head_dim: int, dtype=None):
+        import jax.numpy as jnp
+        dtype = dtype or jnp.float32
+        shape = (n_layers, config.n_blocks + 1, config.block_size,
+                 n_kv_heads, head_dim)
+        self.config = config
+        self.k_pages = jnp.zeros(shape, dtype)
+        self.v_pages = jnp.zeros(shape, dtype)
+
+    @classmethod
+    def from_pools(cls, config: CacheConfig, k_pages, v_pages) -> "PagedKVStore":
+        """Wrap existing pool arrays (e.g. a leaf of the engine's cache tree)."""
+        store = cls.__new__(cls)
+        store.config = config
+        store.rebind(k_pages, v_pages)
+        return store
+
+    def rebind(self, k_pages, v_pages) -> None:
+        assert k_pages.shape == v_pages.shape, (k_pages.shape, v_pages.shape)
+        assert k_pages.shape[1] == self.config.n_blocks + 1, k_pages.shape
+        assert k_pages.shape[2] == self.config.block_size, k_pages.shape
+        self.k_pages = k_pages
+        self.v_pages = v_pages
+
+    # -- geometry ---------------------------------------------------------------
+    @property
+    def n_layers(self) -> int:
+        return self.k_pages.shape[0]
+
+    @property
+    def block_bytes(self) -> int:
+        """HBM bytes one block id pins across all layers (K and V)."""
+        per_page = self.k_pages[:, 0]
+        return 2 * per_page.size * per_page.dtype.itemsize
+
+    @property
+    def capacity_bytes(self) -> int:
+        return self.config.n_blocks * self.block_bytes
+
+    # -- physical access ---------------------------------------------------------
+    def write_token(self, table: list, pos: int, k, v) -> None:
+        """Write one token's K/V (``[n_layers, n_kv_heads, head_dim]``) at
+        logical position ``pos`` of the lane backed by ``table``."""
+        block = table[pos // self.config.block_size]
+        off = pos % self.config.block_size
+        self.k_pages = self.k_pages.at[:, block, off].set(k)
+        self.v_pages = self.v_pages.at[:, block, off].set(v)
+
+    def gather_slot(self, table: list, context_len: int):
+        """Reconstruct the lane's logical K/V: ``[n_layers, context_len,
+        n_kv_heads, head_dim]`` each, gathered through ``table``."""
+        import jax.numpy as jnp
+        idx = jnp.asarray(table, jnp.int32)
+        L, KV, hd = self.n_layers, self.k_pages.shape[3], self.k_pages.shape[4]
+        k = self.k_pages[:, idx].reshape(L, -1, KV, hd)[:, :context_len]
+        v = self.v_pages[:, idx].reshape(L, -1, KV, hd)[:, :context_len]
+        return k, v
+
 
 class BlockAllocator:
-    """Free-list block allocator with per-slot block tables."""
+    """Free-list block allocator with per-slot block tables.
 
-    def __init__(self, config: CacheConfig):
+    Optionally carries one or more attached ``PagedKVStore``s (the engine
+    attaches one per attention cache leaf); the allocator then reports
+    physical residency in bytes, and ``write_token``/``gather_slot``
+    resolve a slot's table against the first store.
+    """
+
+    def __init__(self, config: CacheConfig,
+                 store: Optional[PagedKVStore] = None):
         self.config = config
         # LIFO free list: reclaimed blocks are reused first (cache-friendly)
         self._free: list[int] = list(range(config.n_blocks - 1, -1, -1))
@@ -42,6 +136,9 @@ class BlockAllocator:
         self.tables: dict[int, list[int]] = {}
         # slot -> tokens currently resident (drives the growth math)
         self._tokens: dict[int, int] = {}
+        self.stores: list[PagedKVStore] = []
+        if store is not None:
+            self.attach_store(store)
 
     # -- queries ----------------------------------------------------------------
     @property
@@ -115,3 +212,35 @@ class BlockAllocator:
             raise AssertionError(f"{leaked} blocks leaked")
         if len(set(self._free)) != len(self._free):
             raise AssertionError("duplicate block ids in free list")
+
+    # -- physical store ----------------------------------------------------------
+    def attach_store(self, store: PagedKVStore) -> None:
+        if store.config.block_size != self.config.block_size or \
+                store.config.n_blocks != self.config.n_blocks:
+            raise ValueError("store geometry does not match allocator config")
+        self.stores.append(store)
+
+    def padded_table(self, slot: int, width: int) -> list[int]:
+        """``slot``'s block table padded to ``width`` entries with the null
+        block id (unallocated logical blocks resolve to the scratch page)."""
+        table = self.tables[slot]
+        if len(table) > width:
+            raise ValueError(f"table of {len(table)} blocks exceeds width {width}")
+        return table + [self.config.null_block] * (width - len(table))
+
+    def write_token(self, slot: int, pos: int, k, v) -> None:
+        """Write one token's K/V into ``slot``'s lane via the first store."""
+        self.stores[0].write_token(self.tables[slot], pos, k, v)
+
+    def gather_slot(self, slot: int, context_len: Optional[int] = None):
+        """Gather ``slot``'s logical K/V view from the first store."""
+        if context_len is None:
+            context_len = self._tokens[slot]
+        return self.stores[0].gather_slot(self.tables[slot], context_len)
+
+    def resident_bytes(self) -> int:
+        """Physical HBM bytes pinned by allocated blocks (0 with no store)."""
+        return self.n_in_use * sum(s.block_bytes for s in self.stores)
+
+    def capacity_bytes(self) -> int:
+        return self.config.n_blocks * sum(s.block_bytes for s in self.stores)

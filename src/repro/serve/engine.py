@@ -10,9 +10,24 @@ long_500k cells).
 queued prompts into free decode lanes mid-stream (no batch boundaries), a
 block allocator accounts the KV cache and reclaims it on EOS/max-tokens, and
 per-step telemetry (slot occupancy, cache pressure, latency) feeds the paper
-§3 scheduling assistants.  Decode runs as a vmapped single-request lane over
-a slot-stacked cache tree, so every lane carries its own absolute position —
-the emitted tokens are bit-identical to per-request greedy decoding.
+§3 scheduling assistants.  Two decode regimes (see docs/serving.md):
+
+* dense (default) — a vmapped single-request lane over a slot-stacked cache
+  tree; every lane carries its own absolute position, so emitted tokens are
+  bit-identical to per-request greedy decoding.
+* paged (``paged=True``) — the physical regime: every attention layer's KV
+  lives in shared ``[n_pages, block_size, KV, hd]`` page pools, lanes are
+  carved out by per-slot block tables, and decode is one batched step that
+  writes each lane's token through its table and attends via the
+  gather-based paged kernel.  Token identity is preserved because the
+  gathered view has exactly ``kv_len`` rows (``kv_len % block_size == 0``
+  is enforced) and masked rows contribute exact zeros.
+
+On top of either regime, ``bucket_prompts=True`` pads prefills to
+power-of-two buckets (compile count bounded by the bucket count instead of
+the number of distinct prompt lengths), and ``prefill_chunk=N`` (paged only)
+splits long prompts into N-token chunks interleaved with decode steps so
+admission never stalls running lanes.
 """
 
 from __future__ import annotations
@@ -24,13 +39,22 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 from repro.models import lm
 from repro.models.config import ModelConfig
 from repro.runtime.telemetry import ServeTelemetry
 
-from .cache import BlockAllocator, CacheConfig
+from .cache import BlockAllocator, CacheConfig, PagedKVStore
 from .scheduler import ActiveSlot, Request, SlotScheduler
+
+PREFILL_BUCKET_FLOOR = 8
+
+
+def bucket_length(n: int, cap: int, floor: int = PREFILL_BUCKET_FLOOR) -> int:
+    """Smallest power-of-two bucket >= n (>= floor), clamped to cap."""
+    b = max(floor, 1 << max(0, (n - 1).bit_length()))
+    return min(max(b, n), cap)
 
 
 def make_prefill_step(cfg: ModelConfig, impl: str = "chunked",
@@ -57,6 +81,62 @@ def make_serve_step(cfg: ModelConfig, impl: str = "chunked",
                               axis=-1).astype(jnp.int32)
         return next_tok, new_cache
     return serve_step
+
+
+def make_bucketed_prefill_step(cfg: ModelConfig, impl: str = "chunked"):
+    """prefill(params, cache, tokens [B, Sb], true_len) -> (next_tok, cache).
+
+    The prompt is right-padded to a bucket length Sb; causality makes the
+    logits at ``true_len - 1`` exact, and the padded rows' cache entries are
+    position-invalidated so decode can never attend them.  One compile per
+    bucket instead of one per distinct prompt length.
+    """
+    def prefill_step(params, cache, tokens, true_len):
+        logits, new_cache, _ = lm.forward(
+            cfg, params, tokens, cache=cache, mode="prefill", impl=impl)
+        last = lax.dynamic_index_in_dim(logits, true_len - 1, axis=1,
+                                        keepdims=False)
+        next_tok = jnp.argmax(last[:, :cfg.vocab_size],
+                              axis=-1).astype(jnp.int32)
+        return next_tok, lm.mask_cache_positions(new_cache, true_len)
+    return prefill_step
+
+
+def make_paged_decode_step(cfg: ModelConfig, impl: str = "chunked"):
+    """decode(params, caches, toks [B], pos [B], tables [B, W]) ->
+    (next_toks [B], caches). One batched step over every lane; each lane
+    writes its token's K/V through its block table into the shared pools."""
+    def decode_step(params, caches, toks, pos, tables):
+        logits, new_cache, _ = lm.forward(
+            cfg, params, toks[:, None], positions=pos, cache=caches,
+            mode="decode", impl=impl, paged_tables=tables)
+        next_tok = jnp.argmax(logits[:, -1, :cfg.vocab_size],
+                              axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+    return decode_step
+
+
+def make_chunk_prefill_step(cfg: ModelConfig, chunk: int,
+                            impl: str = "chunked"):
+    """chunk(params, caches, tokens [1, C], start, tables [1, W], last_idx)
+    -> (candidate_tok [1], caches).
+
+    Processes one C-token slice of a prompt directly against the paged
+    pools: writes the slice's K/V through the lane's block table, attends
+    causally over everything resident so far, and returns the greedy token
+    read at ``last_idx`` (only meaningful on the final slice).  Fixed C
+    means exactly one compile regardless of prompt lengths.
+    """
+    def chunk_step(params, caches, tokens, start, tables, last_idx):
+        positions = start + jnp.arange(chunk, dtype=jnp.int32)
+        logits, new_cache, _ = lm.forward(
+            cfg, params, tokens, positions=positions, cache=caches,
+            mode="prefill", impl=impl, paged_tables=tables)
+        last = lax.dynamic_index_in_dim(logits, last_idx, axis=1,
+                                        keepdims=False)
+        tok = jnp.argmax(last[:, :cfg.vocab_size], axis=-1).astype(jnp.int32)
+        return tok, new_cache
+    return chunk_step
 
 
 @dataclass
@@ -94,14 +174,23 @@ class ContinuousEngine:
     """Continuous-batching greedy-decoding engine (decoder-only archs).
 
     Requests are ``submit()``-ed with an arrival step, then ``run()`` drives
-    the loop: admit arrived requests into free slots (single-request prefill
-    inserted into the slot's cache lane), one vmapped decode step across all
-    lanes with per-slot positions, retire slots on EOS/max-tokens and reclaim
-    their cache blocks.  A lane's computation is exactly the B=1 decode path,
-    so outputs are token-identical to ``Engine.generate`` per request.
+    the loop: admit arrived requests into free slots, prefill them (whole,
+    bucketed, or in interleaved chunks), one decode step across all lanes
+    with per-slot positions, retire slots on EOS/max-tokens and reclaim
+    their cache blocks.  A lane's computation is exactly the B=1 decode
+    path, so outputs are token-identical to ``Engine.generate`` per request
+    in every mode.
 
-    Prefill compiles once per distinct prompt length (bucket prompts upstream
-    if that matters); decode and cache insertion compile once.
+    Modes (see module docstring and docs/serving.md):
+
+    * ``paged=True`` — physical paged KV cache: shared page pools + per-slot
+      block tables instead of dense per-slot lanes.  Requires an all-global-
+      attention arch and ``kv_len % block_size == 0``.
+    * ``bucket_prompts=True`` — pad prefills to power-of-two buckets; the
+      prefill compile count is bounded by the bucket count.
+    * ``prefill_chunk=N`` — (paged only) split prompts into N-token chunks,
+      one chunk per engine step, interleaved with decode of running lanes;
+      exactly one prefill compile regardless of prompt lengths.
     """
 
     cfg: ModelConfig
@@ -111,6 +200,9 @@ class ContinuousEngine:
     dtype: object = jnp.float32
     impl: str = "chunked"
     block_size: int = 16
+    paged: bool = False
+    bucket_prompts: bool = False
+    prefill_chunk: int = 0
     telemetry: Optional[ServeTelemetry] = None
     _next_rid: int = field(default=0, repr=False)
 
@@ -119,6 +211,19 @@ class ContinuousEngine:
             raise NotImplementedError(
                 "ContinuousEngine serves decoder-only archs; use Engine for "
                 "frontend/enc-dec configs")
+        if self.prefill_chunk and not self.paged:
+            raise ValueError("prefill_chunk requires paged=True (chunks are "
+                             "written straight into the page pools)")
+        if (self.paged or self.bucket_prompts) and not lm.supports_paged(self.cfg):
+            raise NotImplementedError(
+                f"{self.cfg.name}: paged / bucketed serving requires an "
+                "all-global-attention arch (window caches evict by position "
+                "and recurrent state absorbs padding irreversibly)")
+        if self.paged and self.kv_len % self.block_size:
+            raise ValueError(
+                f"paged mode needs kv_len ({self.kv_len}) divisible by "
+                f"block_size ({self.block_size}) so the gathered KV view "
+                "matches the dense oracle shape (token identity)")
         blocks_per_slot = -(-self.kv_len // self.block_size)
         self.allocator = BlockAllocator(CacheConfig(
             block_size=self.block_size,
@@ -127,32 +232,82 @@ class ContinuousEngine:
                                        self.kv_len)
         if self.telemetry is None:
             self.telemetry = ServeTelemetry()
+
         self._prefill = jax.jit(make_prefill_step(self.cfg, self.impl))
-        serve_step = make_serve_step(self.cfg, self.impl)
-
-        def lane_decode(params, cache, tok, pos):
-            nt, nc = serve_step(params, cache, tok.reshape(1, 1), pos)
-            return nt[0], nc
-
-        self._decode = jax.jit(jax.vmap(lane_decode,
-                                        in_axes=(None, 0, 0, 0)))
-
-        # one fused dispatch per admission: lane insert + token/pos scatter
-        def admit_update(caches, single, toks, pos, slot, tok, start_pos):
-            caches = lm.write_slot_cache(caches, single, slot)
-            return caches, toks.at[slot].set(tok), pos.at[slot].set(start_pos)
-
-        self._insert = jax.jit(admit_update)
-        self._caches = lm.init_slot_caches(self.cfg, self.n_slots,
-                                           self.kv_len, self.dtype)
-        # reusable zeroed single-request cache fed to every prefill (jax
-        # arrays are immutable, so sharing the template across admissions
-        # is safe and saves an alloc+zero per request)
+        self._prefill_b = jax.jit(make_bucketed_prefill_step(self.cfg,
+                                                             self.impl))
+        # reusable zeroed single-request cache fed to every full prefill
+        # (jax arrays are immutable, so sharing the template across
+        # admissions is safe and saves an alloc+zero per request)
         self._fresh = lm.init_cache(self.cfg, 1, self.kv_len, self.dtype)
         self._toks = jnp.zeros((self.n_slots,), jnp.int32)
         self._pos = jnp.zeros((self.n_slots,), jnp.int32)
         self._now = 0
         self._rids: set = set()
+        # slot -> (prompt tokens, chunks done) while chunk-prefilling
+        self._prefilling: dict[int, list] = {}
+
+        if self.paged:
+            self._init_paged()
+        else:
+            serve_step = make_serve_step(self.cfg, self.impl)
+
+            def lane_decode(params, cache, tok, pos):
+                nt, nc = serve_step(params, cache, tok.reshape(1, 1), pos)
+                return nt[0], nc
+
+            self._decode = jax.jit(jax.vmap(lane_decode,
+                                            in_axes=(None, 0, 0, 0)))
+
+            # one fused dispatch per admission: lane insert + token/pos scatter
+            def admit_update(caches, single, toks, pos, slot, tok, start_pos):
+                caches = lm.write_slot_cache(caches, single, slot)
+                return (caches, toks.at[slot].set(tok),
+                        pos.at[slot].set(start_pos))
+
+            self._insert = jax.jit(admit_update)
+            self._caches = lm.init_slot_caches(self.cfg, self.n_slots,
+                                               self.kv_len, self.dtype)
+
+    def _init_paged(self) -> None:
+        """Physical regime: page pools, block tables, store bindings."""
+        cache_cfg = self.allocator.config
+        null = cache_cfg.null_block
+        self._max_blocks = self.kv_len // self.block_size
+        self._caches = lm.init_paged_caches(
+            self.cfg, cache_cfg.n_blocks + 1, self.block_size, self.dtype)
+        # one PagedKVStore per attention cache leaf — the allocator owns the
+        # physical pools between steps (residency telemetry, gather_slot)
+        for _, leaf in lm.paged_cache_leaves(self._caches):
+            self.allocator.attach_store(PagedKVStore.from_pools(
+                cache_cfg, leaf["k_pages"], leaf["v_pages"]))
+        self._null_row = jnp.full((self._max_blocks,), null, jnp.int32)
+        self._tables = jnp.tile(self._null_row[None], (self.n_slots, 1))
+        self._table_rows: dict[int, list] = {}
+        self._host_pos: dict[int, int] = {}
+
+        self._decode_p = jax.jit(make_paged_decode_step(self.cfg, self.impl))
+        if self.prefill_chunk:
+            self._chunk = jax.jit(make_chunk_prefill_step(
+                self.cfg, self.prefill_chunk, self.impl))
+
+        def paged_insert(caches, single, table_row, true_len):
+            return lm.insert_paged_prompt(
+                caches, single, table_row, true_len,
+                block_size=self.block_size, null_block=null)
+
+        def lane_set(toks, pos, tables, slot, tok, start_pos, row):
+            return (toks.at[slot].set(tok), pos.at[slot].set(start_pos),
+                    tables.at[slot].set(row))
+
+        self._insert_p = jax.jit(paged_insert)
+        self._lane_set = jax.jit(lane_set)
+
+    def _rebind_stores(self) -> None:
+        """Hand the post-step pool arrays back to the allocator's stores."""
+        for (_, leaf), store in zip(lm.paged_cache_leaves(self._caches),
+                                    self.allocator.stores):
+            store.rebind(leaf["k_pages"], leaf["v_pages"])
 
     @property
     def now(self) -> int:
@@ -180,13 +335,103 @@ class ContinuousEngine:
         return rid
 
     # -- serving loop --------------------------------------------------------------
-    def _admit_one(self, act: ActiveSlot, slot_idx) -> None:
-        prompt = jnp.asarray(act.request.prompt, jnp.int32)[None]
-        tok, cache = self._prefill(self.params, self._fresh, prompt, None)
-        self._caches, self._toks, self._pos = self._insert(
-            self._caches, cache, self._toks, self._pos, slot_idx, tok[0],
-            jnp.asarray(act.request.prompt_len, jnp.int32))
+    def prefill_compiles(self) -> int:
+        """Total prefill compilations so far (whole + bucketed + chunked) —
+        with bucketing this is bounded by the bucket count; with chunked
+        prefill it is exactly 1 once any prompt has been processed."""
+        fns = [self._prefill, self._prefill_b, getattr(self, "_chunk", None)]
+        return sum(f._cache_size() for f in fns if f is not None)
+
+    def _full_prefill(self, prompt_len: int, prompt) -> tuple:
+        """Whole-prompt prefill into the dense scratch cache; returns
+        (first token [1], populated single-request cache)."""
+        if self.bucket_prompts:
+            sb = bucket_length(prompt_len, self.kv_len)
+            padded = jnp.zeros((1, sb), jnp.int32).at[0, :prompt_len].set(prompt)
+            return self._prefill_b(self.params, self._fresh, padded,
+                                   jnp.asarray(prompt_len, jnp.int32))
+        return self._prefill(self.params, self._fresh, prompt[None], None)
+
+    def _activate_lane(self, slot: int, tok, start_pos: int) -> None:
+        """Bring a freshly prefilled request online in decode lane ``slot``
+        (paged regime: also publish its block table to the decode step)."""
+        row = jnp.asarray(self._table_rows[slot], jnp.int32)
+        self._toks, self._pos, self._tables = self._lane_set(
+            self._toks, self._pos, self._tables,
+            jnp.asarray(slot, jnp.int32), tok,
+            jnp.asarray(start_pos, jnp.int32), row)
+        self._host_pos[slot] = start_pos
+
+    def _admit_one(self, act: ActiveSlot) -> None:
+        slot = act.slot
+        prompt_len = act.request.prompt_len
+        prompt = jnp.asarray(act.request.prompt, jnp.int32)
+        if not self.paged:
+            tok, cache = self._full_prefill(prompt_len, prompt)
+            self._caches, self._toks, self._pos = self._insert(
+                self._caches, cache, self._toks, self._pos,
+                jnp.asarray(slot, jnp.int32), tok[0],
+                jnp.asarray(prompt_len, jnp.int32))
+            act.tokens.append(int(tok[0]))
+            return
+        self._table_rows[slot] = self.allocator.padded_table(
+            slot, self._max_blocks)
+        if self.prefill_chunk:
+            # defer: one chunk per engine step, interleaved with decode
+            self._prefilling[slot] = [prompt, 0]
+            return
+        tok, cache = self._full_prefill(prompt_len, prompt)
+        self._caches = self._insert_p(
+            self._caches, cache,
+            jnp.asarray(self._table_rows[slot], jnp.int32),
+            jnp.asarray(prompt_len, jnp.int32))
+        self._activate_lane(slot, tok[0], prompt_len)
         act.tokens.append(int(tok[0]))
+
+    def _run_chunk(self, slot: int) -> bool:
+        """Advance ``slot``'s chunked prefill by one chunk; returns True
+        (and activates the decode lane) when the prompt is fully resident."""
+        prompt, done = self._prefilling[slot]
+        C = self.prefill_chunk
+        start = done * C
+        prompt_len = prompt.shape[0]
+        piece = prompt[start:start + C]
+        if piece.shape[0] < C:                 # pad final chunk to C
+            piece = jnp.zeros((C,), jnp.int32).at[:piece.shape[0]].set(piece)
+        last = prompt_len - 1 - start          # only valid on the final chunk
+        tok, self._caches = self._chunk(
+            self.params, self._caches, piece[None],
+            jnp.asarray(start, jnp.int32),
+            jnp.asarray(self._table_rows[slot], jnp.int32)[None],
+            jnp.asarray(min(max(last, 0), C - 1), jnp.int32))
+        self._prefilling[slot][1] = done + 1
+        if start + C < prompt_len:
+            return False
+        del self._prefilling[slot]
+        self._activate_lane(slot, tok[0], prompt_len)
+        self.scheduler.active[slot].tokens.append(int(tok[0]))
+        return True
+
+    def _finish(self, slot: int) -> list:
+        """Retire ``slot`` (reclaims blocks; paged: unmap its table row)."""
+        act = self.scheduler.finish(slot)
+        if self.paged:
+            self._tables = self._tables.at[slot].set(self._null_row)
+            self._table_rows.pop(slot, None)
+            self._host_pos.pop(slot, None)
+        return act.tokens
+
+    def _grow_tables(self, decoding: list) -> None:
+        """Paged: claim the block backing each lane's next write *before*
+        the decode step runs — the write needs a physical destination, so
+        growth is eager here where dense accounting could stay lazy."""
+        for slot in decoding:
+            fresh = self.allocator.extend(slot, self._host_pos[slot] + 1)
+            if fresh:
+                row = self.allocator.padded_table(slot, self._max_blocks)
+                self._table_rows[slot] = row
+                self._tables = self._tables.at[slot].set(
+                    jnp.asarray(row, jnp.int32))
 
     def run(self, max_steps: Optional[int] = None) -> dict:
         """Serve every queued request to completion. Returns
@@ -202,22 +447,31 @@ class ContinuousEngine:
                 break
             now = self._now
             t0 = time.perf_counter()
-            prefills = 0
+            prefills = 0                       # completed (one token each)
+            chunks = 0                         # chunk work units
             for act in self.scheduler.admit(now):
-                self._admit_one(act, jnp.asarray(act.slot, jnp.int32))
+                self._admit_one(act)
+                if act.slot in self._prefilling:
+                    continue                   # chunked: no token yet
                 prefills += 1
                 if act.is_finished():          # max_new == 1 or prompt-EOS
-                    results[act.request.rid] = self.scheduler.finish(
-                        act.slot).tokens
+                    results[act.request.rid] = self._finish(act.slot)
+            # chunked prefills: one chunk per prefilling slot per step,
+            # interleaved with the decode of running lanes below
+            for slot in sorted(self._prefilling):
+                finished = self._run_chunk(slot)
+                chunks += 1
+                if finished:
+                    prefills += 1              # final chunk emitted a token
+                    act = self.scheduler.active[slot]
+                    if act.is_finished():
+                        results[act.request.rid] = self._finish(slot)
 
-            if not self.scheduler.active:
-                if prefills:                   # all admissions done at prefill
-                    self.telemetry.record_step(
-                        step=now, seconds=time.perf_counter() - t0,
-                        active_slots=(), n_slots=self.n_slots,
-                        blocks_in_use=self.allocator.n_in_use,
-                        n_blocks=self.allocator.n_blocks,
-                        prefills=prefills, new_tokens=0)
+            decoding = sorted(s for s in self.scheduler.active
+                              if s not in self._prefilling)
+            if not decoding:
+                if prefills or chunks:         # all work this step was prefill
+                    self._record_step(now, t0, (), prefills, chunks, 0)
                     self._now = now + 1
                     steps += 1
                     continue
@@ -227,29 +481,45 @@ class ContinuousEngine:
                 self._now = max(now + 1, nxt)  # idle: jump to next arrival
                 continue
 
-            active = sorted(self.scheduler.active)
-            toks, self._caches = self._decode(self.params, self._caches,
-                                              self._toks, self._pos)
+            if self.paged:
+                self._grow_tables(decoding)
+                toks, self._caches = self._decode_p(
+                    self.params, self._caches, self._toks, self._pos,
+                    self._tables)
+            else:
+                toks, self._caches = self._decode(self.params, self._caches,
+                                                  self._toks, self._pos)
             self._toks = toks
             self._pos = self._pos + 1
             toks_host = np.asarray(toks)       # one device->host transfer
             new_tokens = 0
-            for slot in active:
+            for slot in decoding:
                 act = self.scheduler.active[slot]
                 act.tokens.append(int(toks_host[slot]))
                 new_tokens += 1
-                # cache entries resident after this step: prompt + all decode
-                # writes so far (the just-emitted token is not yet written)
-                self.allocator.extend(slot, act.position - 1)
+                if self.paged:
+                    self._host_pos[slot] += 1
+                else:
+                    # cache entries resident after this step: prompt + all
+                    # decode writes so far (the just-emitted token is not
+                    # yet written); paged growth happened eagerly above
+                    self.allocator.extend(slot, act.position - 1)
                 if act.is_finished():
-                    results[act.request.rid] = self.scheduler.finish(
-                        slot).tokens
-            self.telemetry.record_step(
-                step=now, seconds=time.perf_counter() - t0,
-                active_slots=active, n_slots=self.n_slots,
-                blocks_in_use=self.allocator.n_in_use,
-                n_blocks=self.allocator.n_blocks,
-                prefills=prefills, new_tokens=new_tokens)
+                    results[act.request.rid] = self._finish(slot)
+            self._record_step(now, t0, decoding, prefills, chunks, new_tokens)
             self._now = now + 1
             steps += 1
+        if self.paged:
+            self._rebind_stores()
         return results
+
+    def _record_step(self, now: int, t0: float, active_slots, prefills: int,
+                     chunks: int, new_tokens: int) -> None:
+        self.telemetry.record_step(
+            step=now, seconds=time.perf_counter() - t0,
+            active_slots=active_slots, n_slots=self.n_slots,
+            blocks_in_use=self.allocator.n_in_use,
+            n_blocks=self.allocator.n_blocks,
+            prefills=prefills, prefill_chunks=chunks, new_tokens=new_tokens,
+            resident_bytes=self.allocator.resident_bytes(),
+            capacity_bytes=self.allocator.capacity_bytes())

@@ -1,0 +1,39 @@
+"""Docs hygiene: every relative link in README.md / docs/ resolves, and the
+documented entry points exist (the CI link-check step runs the same tool;
+this keeps it enforced in tier-1 too)."""
+
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def test_markdown_links_resolve():
+    out = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "check_markdown_links.py"),
+         str(ROOT)],
+        capture_output=True, text=True)
+    assert out.returncode == 0, out.stderr + out.stdout
+
+
+def test_readme_and_docs_exist():
+    for name in ("README.md", "docs/serving.md", "docs/kernels.md",
+                 "ROADMAP.md", "PAPER.md", "CHANGES.md"):
+        assert (ROOT / name).is_file(), name
+
+
+def test_documented_modules_import():
+    """Commands shown in README/docs refer to these modules; a rename must
+    update the docs (the link checker cannot see module paths).  The launch
+    CLIs are covered by their own (slow) dry-run tests — importing
+    repro.launch pulls in mesh helpers that need a newer jax than some
+    environments carry, so only the serving/kernel modules are probed
+    here."""
+    import importlib
+    for mod in ("repro.serve", "repro.kernels.paged_attention",
+                "repro.kernels.flash_attention", "repro.runtime.telemetry"):
+        importlib.import_module(mod)
+    for path in ("src/repro/launch/serve.py", "src/repro/launch/train.py",
+                 "benchmarks/serve_throughput.py", "examples/quickstart.py"):
+        assert (ROOT / path).is_file(), path

@@ -26,6 +26,74 @@ def test_allocator_alloc_extend_free_roundtrip():
     a.check_no_leaks()
 
 
+def test_allocator_free_then_reallocate_reuses_blocks():
+    """LIFO free list: the blocks a finished request returns are the first
+    ones handed to the next allocation (cache-friendly reuse)."""
+    a = BlockAllocator(CacheConfig(block_size=4, n_blocks=8))
+    first = a.allocate(slot=0, n_tokens=8)
+    a.free_slot(0)
+    second = a.allocate(slot=1, n_tokens=8)
+    assert second == first            # freed ids come back first, same order
+    a.free_slot(1)
+    a.check_no_leaks()
+
+
+def test_allocator_fragmentation_under_churned_admissions():
+    """Interleaved allocate/extend/free leaves a scattered free list; the
+    allocator must keep satisfying requests at full capacity regardless of
+    fragmentation (block tables mean contiguity is never required)."""
+    a = BlockAllocator(CacheConfig(block_size=2, n_blocks=16))
+    a.allocate(0, 4)        # 2 blocks
+    a.allocate(1, 6)        # 3 blocks
+    a.allocate(2, 2)        # 1 block
+    a.free_slot(1)          # hole in the middle
+    a.extend(0, 10)         # grows across the hole
+    a.allocate(3, 8)        # 4 blocks from fragmented free space
+    assert a.n_in_use == 5 + 1 + 4
+    # exactly exhaust the pool even though free ids are non-contiguous
+    rest = a.n_free * a.config.block_size
+    a.allocate(4, rest)
+    assert a.n_free == 0 and not a.can_allocate(1)
+    for slot in (0, 2, 3, 4):
+        a.free_slot(slot)
+    a.check_no_leaks()
+
+
+def test_allocator_no_leaks_under_randomized_lifecycle():
+    """Randomized submit/extend/finish sequences: every terminal state must
+    return the pool to fully-free with unique ids (the check_no_leaks
+    invariant the engine asserts after each run)."""
+    import random
+
+    rng = random.Random(1234)
+    for trial in range(20):
+        a = BlockAllocator(CacheConfig(block_size=4, n_blocks=32))
+        live: dict[int, int] = {}       # slot -> tokens
+        next_slot = 0
+        for _ in range(200):
+            op = rng.random()
+            if op < 0.4:
+                want = rng.randint(1, 24)
+                if a.can_allocate(want):
+                    a.allocate(next_slot, want)
+                    live[next_slot] = want
+                    next_slot += 1
+            elif op < 0.8 and live:
+                slot = rng.choice(sorted(live))
+                grown = live[slot] + rng.randint(0, 6)
+                if a.config.blocks_for(grown) - len(a.tables[slot]) \
+                        <= a.n_free:
+                    a.extend(slot, grown)
+                    live[slot] = grown
+            elif live:
+                slot = rng.choice(sorted(live))
+                a.free_slot(slot)
+                del live[slot]
+        for slot in sorted(live):
+            a.free_slot(slot)
+        a.check_no_leaks()
+
+
 def test_allocator_rejects_over_capacity_and_double_ops():
     a = BlockAllocator(CacheConfig(block_size=4, n_blocks=2))
     assert not a.can_allocate(9)

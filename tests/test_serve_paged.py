@@ -1,0 +1,250 @@
+"""Physical paged serving: PagedKVStore storage, paged-engine token identity
+against the static ``Engine`` oracle, prompt-length bucketing (bounded
+compile count), and chunked prefill interleaving."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get
+from repro.models import lm
+from repro.serve import (BlockAllocator, CacheConfig, ContinuousEngine,
+                         Engine, PagedKVStore, bucket_length)
+
+
+# =============================================================================
+# physical store
+# =============================================================================
+
+def test_store_write_gather_roundtrip_across_block_boundary():
+    cfg = CacheConfig(block_size=4, n_blocks=8)
+    store = PagedKVStore(cfg, n_layers=2, n_kv_heads=2, head_dim=8)
+    alloc = BlockAllocator(cfg, store=store)
+    alloc.allocate(slot=0, n_tokens=3)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    krows = jax.random.normal(k1, (6, 2, 2, 8))      # 6 tokens, [L, KV, hd]
+    vrows = jax.random.normal(k2, (6, 2, 2, 8))
+    for pos in range(3):
+        alloc.write_token(0, pos, krows[pos], vrows[pos])
+    alloc.extend(0, 6)                               # crosses into block 2
+    for pos in range(3, 6):
+        alloc.write_token(0, pos, krows[pos], vrows[pos])
+    k, v = alloc.gather_slot(0)                      # [L, 6, KV, hd]
+    assert k.shape == (2, 6, 2, 8)
+    for pos in range(6):
+        assert jnp.all(k[:, pos] == krows[pos]), pos
+        assert jnp.all(v[:, pos] == vrows[pos]), pos
+    alloc.free_slot(0)
+    alloc.check_no_leaks()
+
+
+def test_store_residency_accounting():
+    cfg = CacheConfig(block_size=4, n_blocks=8)
+    store = PagedKVStore(cfg, n_layers=3, n_kv_heads=2, head_dim=8,
+                         dtype=jnp.float32)
+    alloc = BlockAllocator(cfg, store=store)
+    per_block = 2 * 3 * 4 * 2 * 8 * 4                # K+V, L*bs*KV*hd*f32
+    assert store.block_bytes == per_block
+    assert alloc.capacity_bytes() == 8 * per_block
+    alloc.allocate(0, 10)                            # 3 blocks
+    assert alloc.resident_bytes() == 3 * per_block
+    alloc.free_slot(0)
+    assert alloc.resident_bytes() == 0
+
+
+def test_padded_table_uses_null_block():
+    cfg = CacheConfig(block_size=4, n_blocks=8)
+    alloc = BlockAllocator(cfg)
+    blocks = alloc.allocate(0, 6)
+    row = alloc.padded_table(0, 5)
+    assert row[:2] == blocks and row[2:] == [cfg.null_block] * 3
+    with pytest.raises(ValueError):
+        alloc.padded_table(0, 1)
+    alloc.free_slot(0)
+
+
+# =============================================================================
+# engine gating
+# =============================================================================
+
+def test_paged_requires_global_attention_arch():
+    cfg = get("mamba2-370m").reduced()               # pure SSD, no attn
+    with pytest.raises(NotImplementedError):
+        ContinuousEngine(cfg, params={}, kv_len=32, paged=True)
+
+
+def test_chunked_prefill_requires_paged():
+    cfg = get("paper-mlp").reduced()
+    with pytest.raises(ValueError):
+        ContinuousEngine(cfg, params={}, kv_len=32, prefill_chunk=8)
+
+
+def test_paged_requires_block_aligned_kv_len():
+    cfg = get("paper-mlp").reduced()
+    with pytest.raises(ValueError):
+        ContinuousEngine(cfg, params={}, kv_len=30, block_size=16, paged=True)
+
+
+# =============================================================================
+# token identity (the acceptance bar: paged + bucketing + chunking all equal
+# per-request greedy decode from the static Engine oracle)
+# =============================================================================
+
+def _setup(arch, kv_len=64, n_prompts=5, seed=0):
+    cfg = get(arch).reduced()
+    key = jax.random.PRNGKey(seed)
+    params = lm.init_params(cfg, key, jnp.float32)
+    lens = [5 + (3 * i) % 11 for i in range(n_prompts)]
+    prompts = [jax.random.randint(jax.random.fold_in(key, i), (lens[i],), 0,
+                                  cfg.vocab_size) for i in range(n_prompts)]
+    budgets = [4 + i % 3 for i in range(n_prompts)]
+    ref = Engine(cfg, params, kv_len=kv_len)
+    expects = [ref.generate(p[None], max_new_tokens=b)[0].tolist()
+               for p, b in zip(prompts, budgets)]
+    return cfg, params, prompts, budgets, expects
+
+
+@pytest.mark.parametrize("arch", ["paper-mlp", "tinyllama-1.1b"])
+def test_paged_matches_per_request_greedy(arch):
+    cfg, params, prompts, budgets, expects = _setup(arch)
+    eng = ContinuousEngine(cfg, params, kv_len=64, n_slots=2, paged=True)
+    for i, p in enumerate(prompts):
+        eng.submit(p, max_new_tokens=budgets[i], rid=i, arrival=i)
+    results = eng.run()
+    for i in range(len(prompts)):
+        assert results[i] == expects[i], (arch, i)
+    assert eng.telemetry.peak_resident_bytes() > 0   # physical pages pinned
+    eng.allocator.check_no_leaks()
+    assert eng.allocator.resident_bytes() == 0
+
+
+def test_paged_bucketed_matches_and_bounds_compiles():
+    cfg, params, prompts, budgets, expects = _setup("paper-mlp", n_prompts=7)
+    eng = ContinuousEngine(cfg, params, kv_len=64, n_slots=2, paged=True,
+                           bucket_prompts=True)
+    for i, p in enumerate(prompts):
+        eng.submit(p, max_new_tokens=budgets[i], rid=i, arrival=i)
+    results = eng.run()
+    for i in range(len(prompts)):
+        assert results[i] == expects[i], i
+    # compile count bounded by the bucket count, not distinct prompt lengths
+    distinct = {p.shape[0] for p in prompts}
+    buckets = {bucket_length(n, 64) for n in distinct}
+    assert len(buckets) < len(distinct)
+    assert eng.prefill_compiles() == len(buckets)
+    eng.allocator.check_no_leaks()
+
+
+def test_dense_bucketed_matches_and_bounds_compiles():
+    """Bucketing is independent of the physical regime: the dense engine
+    gets the same compile bound with position-masked pad rows."""
+    cfg, params, prompts, budgets, expects = _setup("paper-mlp", n_prompts=7)
+    eng = ContinuousEngine(cfg, params, kv_len=64, n_slots=2,
+                           bucket_prompts=True)
+    for i, p in enumerate(prompts):
+        eng.submit(p, max_new_tokens=budgets[i], rid=i, arrival=i)
+    results = eng.run()
+    for i in range(len(prompts)):
+        assert results[i] == expects[i], i
+    buckets = {bucket_length(p.shape[0], 64) for p in prompts}
+    assert eng.prefill_compiles() == len(buckets)
+    eng.allocator.check_no_leaks()
+
+
+def test_chunked_prefill_matches_and_compiles_once():
+    cfg, params, prompts, budgets, expects = _setup("paper-mlp", n_prompts=5)
+    eng = ContinuousEngine(cfg, params, kv_len=64, n_slots=2, paged=True,
+                           prefill_chunk=8)
+    for i, p in enumerate(prompts):
+        eng.submit(p, max_new_tokens=budgets[i], rid=i, arrival=i)
+    results = eng.run()
+    for i in range(len(prompts)):
+        assert results[i] == expects[i], i
+    assert eng.prefill_compiles() == 1               # one chunk shape, ever
+    eng.allocator.check_no_leaks()
+
+
+def test_chunked_prefill_interleaves_with_decode():
+    """A long prompt arriving mid-stream must not stall the running lane:
+    some engine steps carry both a prefill chunk and decoded tokens."""
+    cfg = get("paper-mlp").reduced()
+    key = jax.random.PRNGKey(1)
+    params = lm.init_params(cfg, key, jnp.float32)
+    short = jax.random.randint(jax.random.fold_in(key, 0), (4,), 0,
+                               cfg.vocab_size)
+    long = jax.random.randint(jax.random.fold_in(key, 1), (33,), 0,
+                              cfg.vocab_size)
+    eng = ContinuousEngine(cfg, params, kv_len=64, n_slots=2, paged=True,
+                           prefill_chunk=8)
+    eng.submit(short, max_new_tokens=12, rid="short", arrival=0)
+    eng.submit(long, max_new_tokens=3, rid="long", arrival=1)
+    results = eng.run()
+
+    ref = Engine(cfg, params, kv_len=64)
+    assert results["short"] == ref.generate(short[None], 12)[0].tolist()
+    assert results["long"] == ref.generate(long[None], 3)[0].tolist()
+    mixed = [s for s in eng.telemetry.steps
+             if s.prefill_chunks > 0 and s.new_tokens > 0]
+    assert mixed, "no step interleaved a prefill chunk with decode"
+    # chunk work units are not tokens: totals must count only emitted ones
+    assert eng.telemetry.total_tokens() == sum(
+        len(v) for v in results.values())
+    eng.allocator.check_no_leaks()
+
+
+def test_chunked_prefill_pad_rows_cannot_clobber_resident_blocks():
+    """Regression: when the chunk size does not divide kv_len, the final
+    chunk's pad rows reach positions past the table's range; they must be
+    redirected to the null page, not clamped onto the last real block
+    (which holds resident prompt K/V)."""
+    cfg = get("paper-mlp").reduced()
+    key = jax.random.PRNGKey(5)
+    params = lm.init_params(cfg, key, jnp.float32)
+    prompt = jax.random.randint(key, (61,), 0, cfg.vocab_size)
+    eng = ContinuousEngine(cfg, params, kv_len=64, n_slots=1, paged=True,
+                           prefill_chunk=12)      # 12 does not divide 64
+    eng.submit(prompt, max_new_tokens=3, rid=0)
+    results = eng.run()
+    ref = Engine(cfg, params, kv_len=64)
+    assert results[0] == ref.generate(prompt[None], 3)[0].tolist()
+    eng.allocator.check_no_leaks()
+
+
+def test_chunked_prefill_only_request():
+    """max_new_tokens == 1 with a chunked prompt: the single token comes
+    from the final chunk and the slot retires without ever decoding."""
+    cfg = get("paper-mlp").reduced()
+    key = jax.random.PRNGKey(2)
+    params = lm.init_params(cfg, key, jnp.float32)
+    prompt = jax.random.randint(key, (19,), 0, cfg.vocab_size)
+    eng = ContinuousEngine(cfg, params, kv_len=32, n_slots=1, paged=True,
+                           prefill_chunk=8)
+    eng.submit(prompt, max_new_tokens=1, rid=0)
+    results = eng.run()
+    ref = Engine(cfg, params, kv_len=32)
+    assert results[0] == ref.generate(prompt[None], 1)[0].tolist()
+    eng.allocator.check_no_leaks()
+
+
+def test_paged_slot_reuse_after_eos():
+    """EOS frees a paged slot early; the next request reuses its physical
+    blocks (LIFO free list) and still decodes its own reference tokens."""
+    cfg = get("paper-mlp").reduced()
+    key = jax.random.PRNGKey(3)
+    params = lm.init_params(cfg, key, jnp.float32)
+    prompts = [jax.random.randint(jax.random.fold_in(key, 10 + i), (6,), 0,
+                                  cfg.vocab_size) for i in range(2)]
+    ref = Engine(cfg, params, kv_len=48)
+    ref_toks = [ref.generate(p[None], max_new_tokens=8)[0].tolist()
+                for p in prompts]
+
+    eos = ref_toks[0][2]
+    eng = ContinuousEngine(cfg, params, kv_len=48, n_slots=1, paged=True)
+    eng.submit(prompts[0], max_new_tokens=8, rid=0, eos_id=eos)
+    eng.submit(prompts[1], max_new_tokens=8, rid=1)
+    results = eng.run()
+    cut = ref_toks[0].index(eos) + 1
+    assert results[0] == ref_toks[0][:cut]
+    assert results[1] == ref_toks[1]
+    assert eng.scheduler.slot_admissions[0] == 2
+    eng.allocator.check_no_leaks()

@@ -1,0 +1,57 @@
+#!/usr/bin/env python
+"""Markdown link checker for README.md and docs/ (stdlib only, used by CI).
+
+Checks every relative link and image target in the repo's markdown files
+resolves to an existing file or directory (anchors are stripped; external
+http(s)/mailto links are not fetched).  Exits nonzero listing the broken
+links, so a doc reorganisation cannot silently strand references.
+
+    python tools/check_markdown_links.py [root]
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_SCHEMES = ("http://", "https://", "mailto:", "#")
+
+
+def iter_markdown(root: Path):
+    yield from sorted(root.glob("*.md"))
+    docs = root / "docs"
+    if docs.is_dir():
+        yield from sorted(docs.rglob("*.md"))
+
+
+def check_file(md: Path, root: Path) -> list[str]:
+    broken = []
+    for target in LINK_RE.findall(md.read_text(encoding="utf-8")):
+        if target.startswith(SKIP_SCHEMES):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        resolved = (md.parent / path).resolve()
+        if not resolved.exists():
+            broken.append(f"{md.relative_to(root)}: broken link -> {target}")
+    return broken
+
+
+def main(argv: list[str]) -> int:
+    root = Path(argv[1]).resolve() if len(argv) > 1 else Path.cwd()
+    broken: list[str] = []
+    n_files = 0
+    for md in iter_markdown(root):
+        n_files += 1
+        broken.extend(check_file(md, root))
+    for line in broken:
+        print(line, file=sys.stderr)
+    print(f"checked {n_files} markdown files, {len(broken)} broken links")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
