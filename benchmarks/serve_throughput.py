@@ -154,11 +154,13 @@ def _run_continuous(cfg, params, prompts, budgets, kv_len, n_slots,
 def run_paged(arch: str = "tinyllama-1.1b", n_requests: int = 8,
               n_slots: int = 4, stagger: int = 2,
               kv_len: int = 64) -> list[dict]:
-    """Dense (accounting-only) vs physical paged KV cache on one trace.
+    """Dense (accounting-only) vs physical paged cache on one trace.
 
-    Tokens are identical by construction (both regimes are exact); the
-    comparison is decode-step latency and what the telemetry can see —
-    the paged rows report real block residency, the dense rows report 0.
+    Tokens are identical by construction (both regimes decode each lane's
+    greedy argmax over the same resident context — including window-ring
+    and recurrent-state layer groups); the comparison is decode-step
+    latency and what the telemetry can see — the paged rows report real
+    block/state residency, the dense rows report 0.
     """
     cfg = get(arch).reduced()
     key = jax.random.PRNGKey(0)
@@ -209,12 +211,21 @@ def _print_rows(rows: list[dict]) -> None:
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny trace on paper-mlp (CI: keeps the benchmark "
-                         "importable and the engine paths exercised)")
+                    help="tiny traces (CI: keeps the benchmark importable "
+                         "and the engine paths exercised) — paper-mlp plus "
+                         "one window arch and one recurrent arch through "
+                         "the paged path (mixed layer groups)")
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     if args.smoke:
         _print_rows(run_paged("paper-mlp", n_requests=3, n_slots=2,
+                              kv_len=48))
+        # mixed layer groups: a sliding-window arch (window block rings)
+        # and a recurrent arch (O(1) state slots) — run_paged asserts the
+        # paged tokens match the dense regime's
+        _print_rows(run_paged("gemma2-9b", n_requests=2, n_slots=2,
+                              kv_len=48))
+        _print_rows(run_paged("recurrentgemma-2b", n_requests=2, n_slots=2,
                               kv_len=48))
         _print_rows(run_bucketed("paper-mlp", n_requests=4, n_slots=2,
                                  kv_len=48))

@@ -23,13 +23,14 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-@partial(jax.jit, static_argnames=("logit_softcap", "interpret"))
+@partial(jax.jit, static_argnames=("logit_softcap", "window", "interpret"))
 def paged_attention(q, k_pages, v_pages, block_tables, context_lens, *,
-                    logit_softcap=0.0, interpret=None):
+                    logit_softcap=0.0, window=0, interpret=None):
     """Single-token decode attention through a block table.
 
     q: [B, H, hd]; k_pages/v_pages: [n_pages, block_size, KV, hd];
-    block_tables: [B, max_blocks]; context_lens: [B]. Returns [B, H, hd].
+    block_tables: [B, max_blocks]; context_lens: [B]; window: sliding-window
+    width (0 = global). Returns [B, H, hd].
     """
     B, H, hd = q.shape
     KV = k_pages.shape[2]
@@ -37,9 +38,9 @@ def paged_attention(q, k_pages, v_pages, block_tables, context_lens, *,
         return ref.reference(
             q[:, None], k_pages, v_pages, block_tables, context_lens,
             q_positions=(context_lens - 1)[:, None],
-            logit_softcap=logit_softcap)[:, 0]
+            logit_softcap=logit_softcap, window=window)[:, 0]
     if interpret is None:
         interpret = not _on_tpu()
     return paged_attention_fwd(
         q, k_pages, v_pages, block_tables, context_lens,
-        logit_softcap=logit_softcap, interpret=interpret)
+        logit_softcap=logit_softcap, window=window, interpret=interpret)

@@ -38,7 +38,7 @@ NEG_INF = -1e30
 def _kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
             m_ref, l_ref, acc_ref,
             *, scale: float, block_size: int, logit_softcap: float,
-            n_kv_blocks: int):
+            n_kv_blocks: int, window: int):
     b = pl.program_id(0)
     ib = pl.program_id(2)
 
@@ -63,6 +63,12 @@ def _kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
     pos = ib * block_size + jax.lax.broadcasted_iota(
         jnp.int32, (1, block_size), 1)
     mask = pos < lens_ref[b]
+    if window:
+        # sliding window: the decode query sits at lens - 1, so positions
+        # at or below (lens - 1) - window are behind the window — gathered
+        # KV in not-yet-freed ring blocks (or null-page rows where freed
+        # blocks used to be) must contribute exact zeros
+        mask &= pos > lens_ref[b] - 1 - window
     s = jnp.where(mask, s, NEG_INF)
 
     m_prev = m_ref[...]                      # [1]
@@ -87,10 +93,11 @@ def _kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
 
 
 def paged_attention_fwd(q, k_pages, v_pages, block_tables, context_lens, *,
-                        logit_softcap: float = 0.0,
+                        logit_softcap: float = 0.0, window: int = 0,
                         interpret: bool = False) -> jax.Array:
     """q: [B, H, hd]; k_pages/v_pages: [n_pages, bs, KV, hd];
-    block_tables: [B, max_blocks]; context_lens: [B]. Returns [B, H, hd]."""
+    block_tables: [B, max_blocks]; context_lens: [B]; window: sliding-window
+    width (0 = global attention). Returns [B, H, hd]."""
     B, H, hd = q.shape
     n_pages, bs, KV, _ = k_pages.shape
     assert H % KV == 0, (H, KV)
@@ -100,7 +107,7 @@ def paged_attention_fwd(q, k_pages, v_pages, block_tables, context_lens, *,
 
     kernel = functools.partial(
         _kernel, scale=scale, block_size=bs, logit_softcap=logit_softcap,
-        n_kv_blocks=max_blocks)
+        n_kv_blocks=max_blocks, window=window)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,               # block_tables, context_lens

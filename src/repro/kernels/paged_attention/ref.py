@@ -19,6 +19,11 @@ Shape conventions (see docs/kernels.md):
 * ``context_lens``: [B] int32 — resident tokens per lane, *including* any
   token written this step
 * ``q_positions``:  [B, Sq] absolute positions of the query tokens
+* ``window``: sliding-window width (0 = global).  With a window, logical
+  position ``j`` is additionally masked unless ``j > q_pos - window`` — the
+  engine's window block rings rely on this to exclude gathered KV that is
+  resident in a not-yet-freed block but already behind the window (and to
+  neutralize the null-page rows left where freed-behind blocks used to be).
 """
 
 from __future__ import annotations
@@ -30,7 +35,7 @@ import jax.numpy as jnp
 
 
 def reference(q, k_pages, v_pages, block_tables, context_lens, *,
-              q_positions, logit_softcap=0.0):
+              q_positions, logit_softcap=0.0, window=0):
     """Gather-based paged attention. Returns [B, Sq, H, hd]."""
     B, Sq, H, hd = q.shape
     n_pages, block_size, n_kv, _ = k_pages.shape
@@ -52,6 +57,8 @@ def reference(q, k_pages, v_pages, block_tables, context_lens, *,
     # resident (j < context_len) AND causal (j <= q_pos), per lane
     mask = (j[None, None, :] < context_lens[:, None, None]) & \
         (j[None, None, :] <= q_positions[:, :, None])          # [B, Sq, L]
+    if window:
+        mask &= j[None, None, :] > q_positions[:, :, None] - window
     scores = jnp.where(mask[:, None], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     return jnp.einsum("bhqk,bkhd->bqhd", probs, v)

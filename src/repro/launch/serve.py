@@ -74,11 +74,15 @@ def _continuous(args, cfg, params, key):
           f"slot_reuse={eng.scheduler.max_slot_reuse()} "
           f"prefill_compiles={eng.prefill_compiles()}")
     if args.paged:
+        groups = tel.peak_resident_bytes_by_group()
+        per_group = " ".join(f"{g}={b / 1024:.0f}KiB"
+                             for g, b in sorted(groups.items()))
         print(f"[serve-cb] paged: peak_resident="
               f"{tel.peak_resident_bytes() / 1024:.0f}KiB / "
               f"{eng.allocator.capacity_bytes() / 1024:.0f}KiB "
               f"({len(eng.allocator.stores)} layer pools, "
-              f"block_size={eng.block_size})")
+              f"block_size={eng.block_size})"
+              + (f" by_group: {per_group}" if per_group else ""))
     print("first request:", results[0])
 
     if args.adapt:
@@ -112,8 +116,10 @@ def main(argv=None):
     ap.add_argument("--stagger", type=int, default=2,
                     help="continuous: arrival gap between requests, in steps")
     ap.add_argument("--paged", action="store_true",
-                    help="continuous: physical paged KV cache (block-table "
-                         "decode; all-global-attention archs)")
+                    help="continuous: physical paged cache (block-table "
+                         "decode; any decoder-only arch — mixed layer "
+                         "groups: global tables / window rings / recurrent "
+                         "state slots)")
     ap.add_argument("--bucket", action="store_true",
                     help="continuous: pad prefills to power-of-two buckets "
                          "(bounds prefill compile count)")

@@ -214,20 +214,22 @@ def init_paged_attn_cache(cfg: ModelConfig, n_pages: int, block_size: int,
             "v_pages": jnp.zeros(shape, dtype)}
 
 
-def _paged_write(cache: dict, tables: jax.Array, positions: jax.Array,
-                 k: jax.Array, v: jax.Array) -> dict:
-    """Scatter per-token K/V rows into the page pools through block tables.
+def paged_write(k_pages: jax.Array, v_pages: jax.Array, tables: jax.Array,
+                positions: jax.Array, k: jax.Array, v: jax.Array) -> tuple:
+    """Scatter per-token rows into a pair of page pools through block tables.
 
     tables: [B, max_blocks]; positions: [B] (decode: one row per lane) or
     [S] with B == 1 (chunk prefill: the chunk's rows for one lane);
-    k, v: [B, S, KV, hd] with B == len(positions) or S == len(positions).
+    k, v: [B, S, ...] with B == len(positions) or S == len(positions) — the
+    trailing dims are free (attention K/V rows, MLA latent rows).
     Rows whose table entry is the null page land in scratch (inactive lanes,
-    padded chunk tails) — never read back, because reads are masked by
-    ``context_lens``.
+    padded chunk tails, window-ring entries already freed behind the
+    window) — never read back, because reads are masked by ``context_lens``
+    (and the window mask for ring layers).
     """
-    bs = cache["k_pages"].shape[1]
+    bs = k_pages.shape[1]
     width = tables.shape[1]
-    null = cache["k_pages"].shape[0] - 1       # scratch page, by convention
+    null = k_pages.shape[0] - 1                # scratch page, by convention
     blk = positions // bs
     safe = jnp.minimum(blk, width - 1)         # in-bounds for the gather only
     off = positions % bs
@@ -240,20 +242,29 @@ def _paged_write(cache: dict, tables: jax.Array, positions: jax.Array,
     # positions past the table's reach (pad rows of a final chunk, runaway
     # inactive lanes) must go to scratch, not the clamped last real block
     phys = jnp.where(blk < width, phys, null)
-    return {"k_pages": cache["k_pages"].at[phys, off].set(rows_k),
-            "v_pages": cache["v_pages"].at[phys, off].set(rows_v)}
+    return k_pages.at[phys, off].set(rows_k), v_pages.at[phys, off].set(rows_v)
+
+
+def _paged_write(cache: dict, tables: jax.Array, positions: jax.Array,
+                 k: jax.Array, v: jax.Array) -> dict:
+    """``paged_write`` over an attention pool leaf ({"k_pages", "v_pages"})."""
+    kp, vp = paged_write(cache["k_pages"], cache["v_pages"], tables,
+                         positions, k, v)
+    return {"k_pages": kp, "v_pages": vp}
 
 
 def attn_layer(cfg: ModelConfig, p: dict, x: jax.Array, *, local: bool,
                positions: jax.Array, cache: Optional[dict] = None,
                kv_override: Optional[tuple] = None, impl: str = "chunked",
                unroll: bool = False, paged_tables: Optional[jax.Array] = None,
-               shard_fn=None) -> tuple[jax.Array, Optional[dict]]:
+               valid_len=None, shard_fn=None) -> tuple[jax.Array, Optional[dict]]:
     """Pre-norm attention block. Returns (residual output, new cache).
 
     Training/prefill: ``positions`` = [S]; decode: x is [B, 1, D] and
     ``positions`` = [] scalar array of the current position; cache updated.
     ``kv_override`` (k, v, k_positions) implements cross-attention.
+    ``valid_len`` (prefill only): tokens at positions >= valid_len are
+    bucket padding — their rows must never displace real cache content.
 
     Paged mode (cache holds ``k_pages``/``v_pages`` pools and
     ``paged_tables`` carries [B, max_blocks] block tables): decode is a
@@ -261,7 +272,9 @@ def attn_layer(cfg: ModelConfig, p: dict, x: jax.Array, *, local: bool,
     absolute positions; prefill is a per-lane *chunk* — x is [1, C, D] and
     ``positions`` = [C] the chunk's absolute positions.  Both write K/V
     into the shared pools through the tables, then attend through the
-    gather-based paged kernel.  Global attention only (gated upstream).
+    gather-based paged kernel.  Local (sliding-window) layers run the same
+    path over their window block ring with the window mask excluding
+    gathered rows behind ``q_pos - window`` (see docs/serving.md).
     """
     B, S, _ = x.shape
     window = cfg.window_size if local else 0
@@ -281,7 +294,6 @@ def attn_layer(cfg: ModelConfig, p: dict, x: jax.Array, *, local: bool,
     v = sf((h @ p["wv"]).reshape(B, S, cfg.n_kv_heads, cfg.head_dim), "kv_heads")
 
     if cache is not None and "k_pages" in cache:  # physical paged cache
-        assert not window, "paged attention supports global layers only"
         assert paged_tables is not None, "paged cache needs block tables"
         if S == 1:  # batched decode: one token per lane, per-lane positions
             pos = positions.reshape(-1)                       # [B]
@@ -302,13 +314,13 @@ def attn_layer(cfg: ModelConfig, p: dict, x: jax.Array, *, local: bool,
             o = pa_ops.paged_attention(
                 q[:, 0], new_cache["k_pages"], new_cache["v_pages"],
                 paged_tables, ctx,
-                logit_softcap=cfg.attn_logit_softcap)[:, None]
+                logit_softcap=cfg.attn_logit_softcap, window=window)[:, None]
         else:
             from repro.kernels.paged_attention import ref as pa_ref
             o = pa_ref.reference(
                 q, new_cache["k_pages"], new_cache["v_pages"], paged_tables,
                 ctx, q_positions=q_pos,
-                logit_softcap=cfg.attn_logit_softcap)
+                logit_softcap=cfg.attn_logit_softcap, window=window)
         out = sf(o, "heads").reshape(B, S, cfg.q_dim) @ p["wo"]
         return x + out, new_cache
 
@@ -327,7 +339,7 @@ def attn_layer(cfg: ModelConfig, p: dict, x: jax.Array, *, local: bool,
                       causal=True, window=window,
                       logit_softcap=cfg.attn_logit_softcap, impl=impl,
                       unroll=unroll)
-        new_cache = _prefill_cache(cache, k, v, positions, window)
+        new_cache = _prefill_cache(cache, k, v, positions, window, valid_len)
     else:  # decode step
         pos = positions.reshape(())  # scalar current position
         q = apply_rope(q, pos[None], cfg.rope_theta)
@@ -346,19 +358,41 @@ def attn_layer(cfg: ModelConfig, p: dict, x: jax.Array, *, local: bool,
     return x + out, new_cache
 
 
-def _prefill_cache(cache: dict, k, v, positions, window: int) -> dict:
+def _prefill_cache(cache: dict, k, v, positions, window: int,
+                   valid_len=None) -> dict:
     size = cache["k"].shape[1]
     S = k.shape[1]
     if not window or S <= size:
+        # linear layout: bucket pads land in their own (fresh) slots, so
+        # position masking alone (mask_cache_positions) invalidates them
         ck = lax.dynamic_update_slice(cache["k"], k[:, -size:], (0, 0, 0, 0))
         cv = lax.dynamic_update_slice(cache["v"], v[:, -size:], (0, 0, 0, 0))
         cpos = lax.dynamic_update_slice(cache["pos"],
                                         positions[-size:].astype(jnp.int32), (0,))
         return {"k": ck, "v": cv, "pos": cpos}
-    # rolling window: scatter last `size` tokens into pos % size slots
-    tail_k, tail_v = k[:, -size:], v[:, -size:]
-    tail_pos = positions[-size:]
-    slots = tail_pos % size
+    # rolling window: scatter the last `size` REAL tokens into pos % size
+    # slots.  Without bucket padding those are simply the trailing rows;
+    # with padding (valid_len) the real tail ends at valid_len, so slice it
+    # out dynamically and keep old cache content where the slice still
+    # overlaps pad rows (short prompts) — pad rows must never displace real
+    # ring slots (a pad at position p aliases the slot of p - size).
+    if valid_len is None:
+        tail_k, tail_v = k[:, -size:], v[:, -size:]
+        tail_pos = positions[-size:].astype(jnp.int32)
+        slots = tail_pos % size
+    else:
+        start = jnp.clip(valid_len - size, 0, S - size)
+        tail_k = lax.dynamic_slice_in_dim(k, start, size, axis=1)
+        tail_v = lax.dynamic_slice_in_dim(v, start, size, axis=1)
+        tail_pos = lax.dynamic_slice_in_dim(positions.astype(jnp.int32),
+                                            start, size)
+        slots = tail_pos % size
+        keep = tail_pos < valid_len
+        tail_k = jnp.where(keep[None, :, None, None], tail_k,
+                           cache["k"][:, slots])
+        tail_v = jnp.where(keep[None, :, None, None], tail_v,
+                           cache["v"][:, slots])
+        tail_pos = jnp.where(keep, tail_pos, cache["pos"][slots])
     ck = cache["k"].at[:, slots].set(tail_k)
     cv = cache["v"].at[:, slots].set(tail_v)
     cpos = cache["pos"].at[slots].set(tail_pos)

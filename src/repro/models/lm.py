@@ -145,85 +145,268 @@ def write_slot_cache(caches: dict, single: dict, slot) -> dict:
         caches, single)
 
 
-def supports_paged(cfg: ModelConfig) -> bool:
-    """Physical paging (and prompt bucketing / chunked prefill, which rely
-    on position-masked cache validity) is exact only when every mixer is
-    global attention: sliding-window caches evict by position and recurrent
-    (ssd/rglru/mla) state absorbs padded tokens irreversibly."""
-    return all(spec.mixer == "global"
-               for seg in cfg.segments() for spec in seg.cycle)
+def serve_unsupported_reason(cfg: ModelConfig) -> Optional[str]:
+    """One precise capability reason when a config cannot be served by the
+    continuous-batching engine at all, else None.  Decoder-only token LMs
+    (any mixer mix) are servable; the encoder stack / modality frontend
+    families need per-request encoder inputs the request trace does not
+    carry, so they stay on the static ``Engine``."""
+    if cfg.n_enc_layers:
+        return ("continuous serving supports decoder-only token LMs; this "
+                "config has an encoder-decoder stack (cross-attention needs "
+                "per-request encoder outputs) — use the static Engine")
+    if cfg.frontend:
+        return ("continuous serving supports decoder-only token LMs; this "
+                "config has a modality frontend (prefill needs per-request "
+                "frontend embeddings) — use the static Engine")
+    return None
 
 
-def init_paged_caches(cfg: ModelConfig, n_pages: int, block_size: int,
-                      dtype=jnp.bfloat16) -> dict:
-    """Paged decode cache tree: every attention layer's cache leaf is a
-    shared physical page pool ``[n_pages, block_size, KV, hd]`` (no slot
-    axis — lanes are carved out by block tables), stacked to ``[repeats,
-    ...]`` to mirror the scan segments like ``init_cache``."""
-    if not supports_paged(cfg):
-        raise NotImplementedError(
-            f"{cfg.name}: paged KV caching requires all-global attention "
-            "(local/ssd/rglru/mla layers keep dense per-slot caches)")
+# serving cache group per mixer kind: "paged" layers hold per-token rows in
+# shared page pools addressed by growing block tables (MLA latents are
+# per-token rows too); "window" layers hold the same rows behind a sliding
+# ring of blocks (freed back to the allocator once fully behind the window);
+# "recurrent" layers hold O(1) per-slot scan state (no blocks at all).
+_MIXER_GROUP = {"global": "paged", "mla": "paged", "local": "window",
+                "ssd": "recurrent", "rglru": "recurrent"}
+
+
+def serve_groups(cfg: ModelConfig) -> dict[str, tuple[int, ...]]:
+    """Per-layer serving-capability report: cache group -> layer indices.
+
+    This replaces the old whole-model ``supports_paged`` boolean gate — the
+    engine consumes it to build mixed layer groups (global-paged block
+    tables / window block rings / recurrent state slots) so that every
+    decoder-only arch serves under ``paged=True``."""
+    out: dict[str, list[int]] = {"paged": [], "window": [], "recurrent": []}
+    for li, spec in enumerate(cfg.layers()):
+        out[_MIXER_GROUP[spec.mixer]].append(li)
+    return {k: tuple(v) for k, v in out.items()}
+
+
+def init_paged_caches(cfg: ModelConfig, n_slots: int, n_pages: int,
+                      block_size: int, dtype=jnp.bfloat16) -> dict:
+    """Paged decode cache tree with mixed layer groups, stacked to
+    ``[repeats, ...]`` to mirror the scan segments like ``init_cache``:
+
+    * global attention — shared ``[n_pages, block_size, KV, hd]`` K/V page
+      pools (no slot axis — lanes are carved out by block tables);
+    * MLA — shared latent page pools (ckv/krope rows), same block tables;
+    * sliding-window attention — the same pool shape, addressed through
+      window ring tables (entries behind the window are null);
+    * ssd/rglru — slot-stacked O(1) recurrent state ``[repeats, n_slots,
+      ...]`` (one lane per slot, no blocks).
+    """
+    reason = serve_unsupported_reason(cfg)
+    if reason is not None:
+        raise NotImplementedError(f"{cfg.name}: {reason}")
+
+    def stack(leaf: dict, repeats: int) -> dict:
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (repeats,) + x.shape).copy(), leaf)
+
     cache: dict = {}
     for si, seg in enumerate(cfg.segments()):
-        leaf = blocks.init_paged_attn_cache(cfg, n_pages, block_size, dtype)
-        cache[f"seg{si}"] = {
-            f"c{ci}": jax.tree.map(
-                lambda x: jnp.broadcast_to(x, (seg.repeats,) + x.shape).copy(),
-                {"attn": leaf})
-            for ci in range(len(seg.cycle))
-        }
+        seg_c: dict = {}
+        for ci, spec in enumerate(seg.cycle):
+            if spec.mixer in ("global", "local"):
+                leaf = {"attn": blocks.init_paged_attn_cache(
+                    cfg, n_pages, block_size, dtype)}
+            elif spec.mixer == "mla":
+                leaf = {"mla": mla_mod.init_paged_mla_cache(
+                    cfg, n_pages, block_size, dtype)}
+            elif spec.mixer == "ssd":
+                leaf = {"ssd": ssm_mod.init_ssd_cache(cfg, n_slots, dtype)}
+            else:
+                assert spec.mixer == "rglru", spec.mixer
+                leaf = {"rglru": rglru_mod.init_rglru_cache(cfg, n_slots,
+                                                            dtype)}
+            seg_c[f"c{ci}"] = stack(leaf, seg.repeats)
+        cache[f"seg{si}"] = seg_c
     return cache
 
 
-def paged_cache_leaves(caches: dict) -> list[tuple[str, dict]]:
-    """(path, {"k_pages", "v_pages"}) for every paged attention leaf, in
-    deterministic order — the engine binds one ``PagedKVStore`` per leaf."""
-    out: list[tuple[str, dict]] = []
+def _cache_entries(cfg: ModelConfig, caches: dict):
+    """(spec, entry-dict) per scan cycle entry, in deterministic order."""
+    for si, seg in enumerate(cfg.segments()):
+        for ci, spec in enumerate(seg.cycle):
+            yield spec, caches[f"seg{si}"][f"c{ci}"]
 
-    def walk(node, path):
-        if isinstance(node, dict):
-            if "k_pages" in node:
-                out.append((path, node))
-                return
-            for key in sorted(node):
-                walk(node[key], f"{path}/{key}" if path else key)
 
-    walk(caches, "")
+def _map_entries(cfg: ModelConfig, fn, *trees: dict) -> dict:
+    """Rebuild the seg/cycle cache-tree structure with
+    ``fn(spec, *entry_dicts)`` applied to every scan cycle entry."""
+    out: dict = {}
+    for si, seg in enumerate(cfg.segments()):
+        out[f"seg{si}"] = {
+            f"c{ci}": fn(spec, *(t[f"seg{si}"][f"c{ci}"] for t in trees))
+            for ci, spec in enumerate(seg.cycle)}
     return out
 
 
-def insert_paged_prompt(caches: dict, single: dict, table_row: jax.Array,
-                        true_len, *, block_size: int, null_block: int) -> dict:
-    """Scatter a dense single-request prefill cache into the paged pools.
+def _scatter_state(full, one, slot):
+    """Scatter a batch-1 state leaf into lane ``slot`` of the slot-stacked
+    leaf (arrays are [repeats, n_slots, ...] / [repeats, 1, ...])."""
+    return jax.tree.map(
+        lambda f, u: lax.dynamic_update_slice_in_dim(f, u, slot, axis=1),
+        full, one)
+
+
+def paged_cache_leaves(cfg: ModelConfig, caches: dict) -> list[tuple]:
+    """(group, (a_key, b_key), leaf) for every physical pool leaf, in
+    deterministic order — the engine binds one ``PagedKVStore`` per leaf
+    (tagged with its table group) and rebinds them after each jitted step.
+    Recurrent state leaves are not listed (see ``state_cache_leaves``)."""
+    out = []
+    for spec, entry in _cache_entries(cfg, caches):
+        if spec.mixer in ("global", "local"):
+            group = "window" if spec.mixer == "local" else "global"
+            out.append((group, ("k_pages", "v_pages"), entry["attn"]))
+        elif spec.mixer == "mla":
+            out.append(("global", ("ckv_pages", "krope_pages"), entry["mla"]))
+    return out
+
+
+def state_cache_leaves(cfg: ModelConfig, caches: dict) -> list[dict]:
+    """Slot-stacked recurrent state leaves ([repeats, n_slots, ...] arrays),
+    in deterministic order."""
+    return [entry[spec.mixer] for spec, entry in _cache_entries(cfg, caches)
+            if spec.mixer in ("ssd", "rglru")]
+
+
+def state_bytes_per_slot(cfg: ModelConfig, caches: dict) -> int:
+    """Physical bytes one decode lane pins in recurrent state leaves."""
+    total = 0
+    for leaf in state_cache_leaves(cfg, caches):
+        for arr in jax.tree.leaves(leaf):
+            total += (arr.size // arr.shape[1]) * arr.dtype.itemsize
+    return total
+
+
+def lane_view(cfg: ModelConfig, caches: dict, slot) -> dict:
+    """Chunk-prefill view of the paged cache tree for one lane: recurrent
+    state leaves are sliced to ``slot`` (batch 1, carrying the scan state
+    across the lane's prefill chunks); pool leaves pass through whole.
+    ``slot`` may be traced — one compile covers all lanes."""
+    def walk(spec: LayerSpec, entry: dict) -> dict:
+        if spec.mixer in ("ssd", "rglru"):
+            return {spec.mixer: jax.tree.map(
+                lambda x: lax.dynamic_slice_in_dim(x, slot, 1, axis=1),
+                entry[spec.mixer])}
+        return entry
+
+    return _map_entries(cfg, walk, caches)
+
+
+def lane_merge(cfg: ModelConfig, caches: dict, updated: dict, slot) -> dict:
+    """Fold a ``lane_view`` tree a forward pass updated back into the full
+    slot-stacked tree: pool leaves are taken wholesale (they are shared),
+    state leaves are scattered into lane ``slot``."""
+    def walk(spec: LayerSpec, full: dict, upd: dict) -> dict:
+        if spec.mixer in ("ssd", "rglru"):
+            return {spec.mixer: _scatter_state(full[spec.mixer],
+                                               upd[spec.mixer], slot)}
+        return upd
+
+    return _map_entries(cfg, walk, caches, updated)
+
+
+def write_state_lanes(cfg: ModelConfig, caches: dict, single: dict,
+                      slot) -> dict:
+    """Insert a single-request cache's recurrent state leaves into lane
+    ``slot`` of the paged tree; every other entry passes through untouched.
+    The engine uses this with its zeroed scratch cache to reset a reused
+    lane's state before chunked prefill starts carrying state into it."""
+    def walk(spec: LayerSpec, full: dict, one: dict) -> dict:
+        if spec.mixer in ("ssd", "rglru"):
+            return {spec.mixer: _scatter_state(full[spec.mixer],
+                                               one[spec.mixer], slot)}
+        return full
+
+    return _map_entries(cfg, walk, caches, single)
+
+
+def freeze_state_lanes(cfg: ModelConfig, new_caches: dict, old_caches: dict,
+                       active) -> dict:
+    """After a batched paged decode step, restore the recurrent state slabs
+    of inactive lanes (``active``: [n_slots] bool).
+
+    The batched step runs every lane — retired lanes and lanes mid
+    chunked-prefill included — and a recurrent layer's decode would absorb
+    those lanes' garbage tokens into their state slabs (attention/MLA
+    lanes are safe: their writes go through null table rows).  Masking the
+    state update to active lanes keeps a chunk-prefilling lane's carried
+    state untouched between its chunk steps."""
+    def walk(spec: LayerSpec, new_e: dict, old_e: dict) -> dict:
+        if spec.mixer in ("ssd", "rglru"):
+            def sel(n, o):
+                mask = active.reshape((1, active.shape[0]) +
+                                      (1,) * (n.ndim - 2))
+                return jnp.where(mask, n, o)
+            return {spec.mixer: jax.tree.map(sel, new_e[spec.mixer],
+                                             old_e[spec.mixer])}
+        return new_e
+
+    return _map_entries(cfg, walk, new_caches, old_caches)
+
+
+def insert_paged_prompt(cfg: ModelConfig, caches: dict, single: dict,
+                        tables: dict, slot, *, block_size: int,
+                        null_block: int) -> dict:
+    """Scatter a dense single-request prefill cache into the paged tree.
 
     ``single`` is the ``init_cache(cfg, 1, kv_len)`` tree a full prefill
-    populated; rows ``< true_len`` of each attention leaf are written to the
-    physical blocks named by ``table_row`` (padded bucket rows and unused
-    capacity are redirected to the null page).  The pools' other lanes are
-    untouched, so admission never perturbs running requests."""
-    def walk(c, s):
-        if isinstance(c, dict) and "k_pages" in c:
-            kv_len = s["k"].shape[2]           # [repeats, 1, kv_len, KV, hd]
-            rows = jnp.arange(kv_len)
-            blk = jnp.minimum(rows // block_size, table_row.shape[0] - 1)
-            phys = jnp.where(rows < true_len, table_row[blk], null_block)
-            off = rows % block_size
-            return {"k_pages": c["k_pages"].at[:, phys, off].set(s["k"][:, 0]),
-                    "v_pages": c["v_pages"].at[:, phys, off].set(s["v"][:, 0])}
-        return {key: walk(c[key], s[key]) for key in c}
+    populated.  Per layer group: attention/MLA rows are written to the
+    physical blocks named by their group's table row (``tables["global"]`` /
+    ``tables["window"]``) at their absolute cache positions — rows whose
+    position is -1 (bucket padding, empty slots) or whose block is not
+    covered by the table (behind the window ring) are redirected to the
+    null page; ssd/rglru state is inserted into lane ``slot``.  The pools'
+    other lanes are untouched, so admission never perturbs running
+    requests."""
+    def scatter(pages, row_tbl, cpos, rows):
+        width = row_tbl.shape[0]
+        blk = jnp.clip(jnp.where(cpos >= 0, cpos // block_size, 0),
+                       0, width - 1)
+        ok = (cpos >= 0) & ((cpos // block_size) < width)
+        phys = jnp.where(ok, row_tbl[blk], null_block)
+        off = jnp.where(cpos >= 0, cpos % block_size, 0)
+        return pages.at[:, phys, off].set(rows)
 
-    return walk(caches, single)
+    def walk(spec: LayerSpec, full: dict, one: dict) -> dict:
+        if spec.mixer in ("global", "local"):
+            row = tables["window" if spec.mixer == "local" else "global"]
+            leaf, sl = full["attn"], one["attn"]
+            cpos = sl["pos"][0]                # identical across repeats
+            return {"attn": {
+                "k_pages": scatter(leaf["k_pages"], row, cpos, sl["k"][:, 0]),
+                "v_pages": scatter(leaf["v_pages"], row, cpos, sl["v"][:, 0]),
+            }}
+        if spec.mixer == "mla":
+            leaf, sl = full["mla"], one["mla"]
+            cpos = sl["pos"][0]
+            return {"mla": {
+                "ckv_pages": scatter(leaf["ckv_pages"], tables["global"],
+                                     cpos, sl["ckv"][:, 0]),
+                "krope_pages": scatter(leaf["krope_pages"], tables["global"],
+                                       cpos, sl["krope"][:, 0]),
+            }}
+        # ssd/rglru: O(1) recurrent state into the lane
+        return {spec.mixer: _scatter_state(full[spec.mixer],
+                                           one[spec.mixer], slot)}
+
+    return _map_entries(cfg, walk, caches, single)
 
 
 def mask_cache_positions(cache: dict, true_len) -> dict:
-    """Invalidate bucket-padding rows after a padded prefill: any attention
-    cache slot holding a position ``>= true_len`` is marked empty (-1), so
-    the pad tokens' K/V can never be attended to.  Exact only for global
-    attention layers (see ``supports_paged``)."""
+    """Invalidate bucket-padding rows after a padded prefill: any cache slot
+    holding a position ``>= true_len`` is marked empty (-1), so the pad
+    tokens' K/V (attention) or latents (MLA) can never be attended to.
+    Recurrent (ssd/rglru) state needs no masking — the forward's
+    ``valid_len`` freezes it past the real prompt instead."""
     def walk(node):
         if isinstance(node, dict):
-            if "pos" in node and "k" in node:
+            if "pos" in node:
                 pos = node["pos"]
                 return {**node, "pos": jnp.where(pos >= true_len, -1, pos)}
             return {key: walk(val) for key, val in node.items()}
@@ -240,35 +423,40 @@ def _apply_layer(cfg: ModelConfig, spec: LayerSpec, p: dict, h, *,
                  positions, cache: Optional[dict], enc_out, impl: str,
                  n_groups: int, capacity_factor: float = 1.25,
                  moe_lossless: bool = False, unroll: bool = False,
-                 paged_tables=None, shard_fn=None):
+                 paged_tables=None, window_tables=None, valid_len=None,
+                 shard_fn=None):
     """One layer. Returns (h, new_cache_or_None, aux)."""
     aux = jnp.zeros((), jnp.float32)
     new_cache: dict = {}
 
     if spec.mixer in ("global", "local"):
-        h, c = blocks.attn_layer(cfg, p["attn"], h,
-                                 local=(spec.mixer == "local"),
+        local = spec.mixer == "local"
+        h, c = blocks.attn_layer(cfg, p["attn"], h, local=local,
                                  positions=positions,
                                  cache=cache.get("attn") if cache else None,
                                  impl=impl, unroll=unroll,
-                                 paged_tables=paged_tables, shard_fn=shard_fn)
+                                 paged_tables=(window_tables if local
+                                               else paged_tables),
+                                 valid_len=valid_len, shard_fn=shard_fn)
         if c is not None:
             new_cache["attn"] = c
     elif spec.mixer == "mla":
         h, c = mla_mod.mla_layer(cfg, p["mla"], h, positions=positions,
                                  cache=cache.get("mla") if cache else None,
-                                 impl=impl, unroll=unroll, shard_fn=shard_fn)
+                                 impl=impl, unroll=unroll,
+                                 paged_tables=paged_tables, shard_fn=shard_fn)
         if c is not None:
             new_cache["mla"] = c
     elif spec.mixer == "ssd":
         h, c = ssm_mod.ssd_layer(cfg, p["ssd"], h,
                                  cache=cache.get("ssd") if cache else None,
-                                 impl=impl)
+                                 impl=impl, valid_len=valid_len)
         if c is not None:
             new_cache["ssd"] = c
     elif spec.mixer == "rglru":
         h, c = rglru_mod.rglru_layer(cfg, p["rglru"], h,
-                                     cache=cache.get("rglru") if cache else None)
+                                     cache=cache.get("rglru") if cache else None,
+                                     valid_len=valid_len)
         if c is not None:
             new_cache["rglru"] = c
 
@@ -306,7 +494,8 @@ def _run_segment(cfg: ModelConfig, seg: Segment, seg_p: dict, h, *,
                  positions, seg_cache, enc_out, impl: str, n_groups: int,
                  remat: bool, capacity_factor: float = 1.25,
                  moe_lossless: bool = False, unroll: bool = False,
-                 paged_tables=None, shard_fn=None):
+                 paged_tables=None, window_tables=None, valid_len=None,
+                 shard_fn=None):
     def body(carry, xs):
         hh = carry
         ps, cs = xs
@@ -322,6 +511,8 @@ def _run_segment(cfg: ModelConfig, seg: Segment, seg_p: dict, h, *,
                                      moe_lossless=moe_lossless,
                                      unroll=unroll,
                                      paged_tables=paged_tables,
+                                     window_tables=window_tables,
+                                     valid_len=valid_len,
                                      shard_fn=shard_fn)
             aux = aux + a
             if nc is not None:
@@ -344,6 +535,8 @@ def forward(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
             capacity_factor: float = 1.25,
             moe_lossless: Optional[bool] = None,
             paged_tables: Optional[jax.Array] = None,
+            window_tables: Optional[jax.Array] = None,
+            valid_len=None,
             shard_fn=None, unroll: bool = False):
     """Returns (logits, new_cache_or_None, aux_loss).
 
@@ -354,6 +547,12 @@ def forward(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
     paged_tables: [B, max_blocks] block tables when ``cache`` is the paged
       tree from ``init_paged_caches`` (decode: positions is then [B]
       per-lane; chunk prefill: B == 1, positions the chunk's [S] rows).
+    window_tables: [B, max_blocks] window ring tables for sliding-window
+      layers in the paged regime (entries behind the window are null).
+    valid_len: prefill only — tokens at positions >= valid_len are padding
+      (bucketed prefill tails, final prefill chunks); attention caches
+      must not let them displace real rows and recurrent state freezes
+      past them.
     """
     remat = (mode == "train") if remat is None else remat
     decode = mode == "decode"
@@ -419,7 +618,8 @@ def forward(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
             seg_cache=seg_cache, enc_out=enc_out, impl=impl,
             n_groups=n_groups, remat=remat, capacity_factor=capacity_factor,
             moe_lossless=moe_lossless, unroll=unroll,
-            paged_tables=paged_tables, shard_fn=shard_fn)
+            paged_tables=paged_tables, window_tables=window_tables,
+            valid_len=valid_len, shard_fn=shard_fn)
         h = shard_fn(h, "residual")
         aux_total = aux_total + aux
         if ncs is not None:

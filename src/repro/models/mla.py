@@ -42,6 +42,18 @@ def init_mla_cache(cfg: ModelConfig, batch: int, kv_len: int, dtype) -> dict:
     }
 
 
+def init_paged_mla_cache(cfg: ModelConfig, n_pages: int, block_size: int,
+                         dtype) -> dict:
+    """Physical block-pool cache for one MLA layer: the compressed latent
+    (ckv) and shared rope key are per-token rows exactly like attention K/V,
+    so they page through the same global block tables.  ``n_pages`` includes
+    the trailing null/scratch page."""
+    return {
+        "ckv_pages": jnp.zeros((n_pages, block_size, cfg.kv_lora_rank), dtype),
+        "krope_pages": jnp.zeros((n_pages, block_size, cfg.qk_rope_dim), dtype),
+    }
+
+
 def _project(cfg: ModelConfig, p: dict, h: jax.Array, positions: jax.Array):
     """Shared projections. Returns (q_nope, q_rope, ckv, krope)."""
     B, S, _ = h.shape
@@ -59,10 +71,15 @@ def _project(cfg: ModelConfig, p: dict, h: jax.Array, positions: jax.Array):
 def mla_layer(cfg: ModelConfig, p: dict, x: jax.Array, *,
               positions: jax.Array, cache: Optional[dict] = None,
               impl: str = "chunked", unroll: bool = False,
+              paged_tables: Optional[jax.Array] = None,
               shard_fn=None) -> tuple[jax.Array, Optional[dict]]:
     B, S, D = x.shape
     nh = cfg.n_heads
     h = rms_norm(x, p["ln"], cfg.norm_eps)
+
+    if cache is not None and "ckv_pages" in cache:  # physical paged latents
+        assert paged_tables is not None, "paged MLA cache needs block tables"
+        return _mla_paged(cfg, p, x, h, positions, cache, paged_tables)
 
     if cache is not None and S == 1:
         return _mla_decode(cfg, p, x, h, positions, cache)
@@ -88,6 +105,59 @@ def mla_layer(cfg: ModelConfig, p: dict, x: jax.Array, *,
                                       positions[-size:].astype(jnp.int32), (0,))
         new_cache = {"ckv": c, "krope": r, "pos": cp}
     return x + out, new_cache
+
+
+def _mla_paged(cfg, p, x, h, positions, cache, tables):
+    """Absorbed attention over block-table-paged latents.
+
+    Two shapes, mirroring the paged attention layer: batched decode (x is
+    [B, 1, D], ``positions`` = [B] per-lane absolute positions) and chunked
+    prefill (x is [1, C, D], ``positions`` = [C] the chunk's rows).  The
+    latent rows are written through the tables first, then the lane's
+    logical view is gathered back in ascending position order — the same
+    layout the dense cache stores (slot == position), so with the engine's
+    ``kv_len == max_blocks * block_size`` guarantee the decode arithmetic
+    is exactly ``_mla_decode``'s over identical operands.
+    """
+    from .blocks import paged_write
+
+    B, S, _ = x.shape
+    nh = cfg.n_heads
+    if S == 1:  # batched decode: one token per lane, per-lane positions
+        pos = positions.reshape(-1)                              # [B]
+        q_nope, q_rope, ckv_t, krope_t = _project(cfg, p, h, pos[:, None])
+        ctx = pos + 1                 # resident incl. the token just written
+        q_pos = pos[:, None]                                     # [B, 1]
+    else:       # chunk prefill: B == 1 lane, S == chunk rows
+        pos = positions.reshape(-1)                              # [S]
+        q_nope, q_rope, ckv_t, krope_t = _project(cfg, p, h, pos)
+        ctx = pos[-1][None] + 1
+        q_pos = pos[None]                                        # [1, S]
+    ckv_pages, krope_pages = paged_write(
+        cache["ckv_pages"], cache["krope_pages"], tables, pos, ckv_t, krope_t)
+
+    bs = ckv_pages.shape[1]
+    L = tables.shape[1] * bs
+    ckv_c = ckv_pages[tables].reshape(B, L, cfg.kv_lora_rank)
+    krope_c = krope_pages[tables].reshape(B, L, cfg.qk_rope_dim)
+    j = jnp.arange(L, dtype=jnp.int32)
+    pos_c = jnp.where(j[None] < ctx[:, None], j[None], -1)       # [B, L]
+
+    wk = p["wk_up"].reshape(cfg.kv_lora_rank, nh, cfg.qk_nope_dim)
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, wk)
+    scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    scores = (jnp.einsum("bshr,bkr->bshk", q_lat, ckv_c) +
+              jnp.einsum("bshd,bkd->bshk", q_rope, krope_c)).astype(jnp.float32)
+    scores = scores * scale
+    valid = (pos_c[:, None, :] >= 0) & \
+        (pos_c[:, None, :] <= q_pos[:, :, None])                 # [B, S, L]
+    scores = jnp.where(valid[:, :, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o_lat = jnp.einsum("bshk,bkr->bshr", probs, ckv_c)
+    wv = p["wv_up"].reshape(cfg.kv_lora_rank, nh, cfg.v_head_dim)
+    o = jnp.einsum("bshr,rhd->bshd", o_lat, wv)
+    out = o.reshape(B, S, nh * cfg.v_head_dim) @ p["wo"]
+    return x + out, {"ckv_pages": ckv_pages, "krope_pages": krope_pages}
 
 
 def _mla_decode(cfg, p, x, h, positions, cache):

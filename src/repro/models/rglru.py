@@ -75,8 +75,14 @@ def _lru_scan(a: jax.Array, bx: jax.Array,
 
 
 def rglru_layer(cfg: ModelConfig, p: dict, x: jax.Array, *,
-                cache: Optional[dict] = None,
+                cache: Optional[dict] = None, valid_len=None,
                 ) -> tuple[jax.Array, Optional[dict]]:
+    """Prefill with a cache continues from the cache's recurrence/conv state
+    (zeros for a fresh cache), so prompts can be chunk-prefilled with the
+    state carried across calls.  ``valid_len`` (prefill only) freezes the
+    recurrence past that many rows: padded tail rows get (a, bx) = (1, 0) —
+    the scan's identity element — and the conv tail is read from the last
+    real rows."""
     B, S, D = x.shape
     w = cfg.lru_width
     h = rms_norm(x, p["ln"], cfg.norm_eps)
@@ -89,11 +95,17 @@ def rglru_layer(cfg: ModelConfig, p: dict, x: jax.Array, *,
         xc = jnp.einsum("bkc,kc->bc", conv_in, p["conv_w"])[:, None]
         h0 = cache["state"]
     else:
-        xc = _conv(xb, p["conv_w"])
+        conv_state = cache["conv"] if cache is not None else None
+        xc = _conv(xb, p["conv_w"], state=conv_state)
         h0 = cache["state"] if cache is not None else None
         pad = cfg.lru_block_width - 1
-        new_conv = xb[:, -pad:] if S >= pad else jnp.concatenate(
-            [jnp.zeros((B, pad - S, w), x.dtype), xb], axis=1)
+        full = (jnp.concatenate([conv_state.astype(x.dtype), xb], axis=1)
+                if conv_state is not None else jnp.concatenate(
+                    [jnp.zeros((B, pad, w), x.dtype), xb], axis=1))
+        if valid_len is None:
+            new_conv = full[:, -pad:]
+        else:  # last `pad` REAL rows: positions [valid_len - pad, valid_len)
+            new_conv = lax.dynamic_slice_in_dim(full, valid_len, pad, axis=1)
 
     r = jax.nn.sigmoid((xc @ p["w_rg"]).astype(jnp.float32))
     i = jax.nn.sigmoid((xc @ p["w_ig"]).astype(jnp.float32))
@@ -107,6 +119,10 @@ def rglru_layer(cfg: ModelConfig, p: dict, x: jax.Array, *,
         state = a[:, 0] * h0 + bx[:, 0]
         hs = state[:, None]
     else:
+        if valid_len is not None and S > 1:
+            keep = (jnp.arange(S) < valid_len)[None, :, None]
+            a = jnp.where(keep, a, 1.0)      # (1, 0) = scan identity: pad
+            bx = jnp.where(keep, bx, 0.0)    # rows pass the state through
         hs, state = _lru_scan(a, bx, h0)
 
     y = (hs.astype(x.dtype) * gate) @ p["w_out"]

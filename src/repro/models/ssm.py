@@ -117,8 +117,16 @@ def _ssd_chunked_core(xs, dt, A, B_mat, C_mat, D, chunk: int,
 
 def ssd_layer(cfg: ModelConfig, p: dict, x: jax.Array, *,
               cache: Optional[dict] = None, impl: str = "chunked",
-              ) -> tuple[jax.Array, Optional[dict]]:
-    """Full Mamba-2 block: in_proj -> conv -> SSD -> gated norm -> out_proj."""
+              valid_len=None) -> tuple[jax.Array, Optional[dict]]:
+    """Full Mamba-2 block: in_proj -> conv -> SSD -> gated norm -> out_proj.
+
+    Prefill with a cache *continues* from the cache's recurrent/conv state
+    (zeros for a fresh cache), so a prompt can be processed in chunks with
+    the state carried across chunk calls.  ``valid_len`` (prefill only)
+    freezes the recurrence past that many rows: padded tail rows (bucketed
+    prefill, final prefill chunks) set dt = 0, so they neither decay nor
+    feed the state, and the conv tail is read from the last real rows.
+    """
     B, S, D = x.shape
     di, ns, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
     h = rms_norm(x, p["ln"], cfg.norm_eps)
@@ -131,19 +139,27 @@ def ssd_layer(cfg: ModelConfig, p: dict, x: jax.Array, *,
 
     new_cache = None
     xBC_raw = xBC
-    xBC = _causal_conv(xBC, p["conv_w"])
+    conv_state = cache["conv"] if cache is not None else None
+    init_state = cache["state"] if cache is not None else None
+    xBC = _causal_conv(xBC, p["conv_w"], state=conv_state)
     xs, B_mat, C_mat = jnp.split(xBC, [di, di + ns], axis=-1)
     xs = xs.reshape(B, S, nh, hd)
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    if valid_len is not None:
+        dt = jnp.where(jnp.arange(S)[None, :, None] < valid_len, dt, 0.0)
     A = -jnp.exp(p["A_log"])
 
-    if impl == "pallas":
+    if impl == "pallas" and init_state is None:
         from repro.kernels.ssd_scan import ops as ssd_ops
         y, final_state = ssd_ops.ssd_scan(xs, dt, A, B_mat, C_mat, p["D"],
                                           chunk=cfg.ssm_chunk)
     else:
+        # chunk-carried prefill threads the previous chunks' state in; the
+        # Pallas scan has no seeded-state entry point, so carried prefills
+        # take the jnp chunked core (identical semantics)
         y, final_state = _ssd_chunked_core(xs, dt, A, B_mat, C_mat, p["D"],
-                                           cfg.ssm_chunk)
+                                           cfg.ssm_chunk,
+                                           init_state=init_state)
 
     y = y.reshape(B, S, di).astype(x.dtype)
     y = rms_norm(y * jax.nn.silu(z), p["out_ln"], cfg.norm_eps)
@@ -151,8 +167,11 @@ def ssd_layer(cfg: ModelConfig, p: dict, x: jax.Array, *,
 
     if cache is not None:  # prefill cache: raw-conv-input tail + final state
         pad = cfg.d_conv - 1
-        conv_tail = xBC_raw[:, -pad:] if S >= pad else jnp.concatenate(
-            [jnp.zeros((B, pad - S, di + 2 * ns), x.dtype), xBC_raw], axis=1)
+        full = jnp.concatenate([conv_state.astype(x.dtype), xBC_raw], axis=1)
+        if valid_len is None:
+            conv_tail = full[:, -pad:]
+        else:  # last `pad` REAL rows: positions [valid_len - pad, valid_len)
+            conv_tail = lax.dynamic_slice_in_dim(full, valid_len, pad, axis=1)
         new_cache = {"conv": conv_tail, "state": final_state}
     return x + out, new_cache
 

@@ -66,6 +66,11 @@ class ServeStep:
     # accounting-only regime — see serve.cache.PagedKVStore)
     resident_bytes: int = 0
     capacity_bytes: int = 0
+    # per-layer-group residency split (paged regime): {"global": bytes,
+    # "window": bytes, "recurrent": bytes} — window rings stay O(window)
+    # and recurrent slots O(1) regardless of generated length, which this
+    # field lets the assistants (and the invariant tests) observe
+    resident_by_group: dict = field(default_factory=dict)
 
 
 @dataclass
@@ -93,6 +98,7 @@ class ServeTelemetry:
         self._peak_pressure = 0.0
         self._max_concurrency = 0
         self._peak_resident_bytes = 0
+        self._peak_group_bytes: dict = {}
 
     def reset(self) -> None:
         """Drop all recorded steps and whole-run aggregates."""
@@ -102,18 +108,21 @@ class ServeTelemetry:
         self._peak_pressure = 0.0
         self._max_concurrency = 0
         self._peak_resident_bytes = 0
+        self._peak_group_bytes = {}
 
     def record_step(self, step: int, seconds: float, active_slots,
                     n_slots: int, blocks_in_use: int, n_blocks: int,
                     prefills: int = 0, prefill_chunks: int = 0,
                     new_tokens: int = 0,
-                    resident_bytes: int = 0, capacity_bytes: int = 0) -> None:
+                    resident_bytes: int = 0, capacity_bytes: int = 0,
+                    resident_by_group: dict = None) -> None:
         self.steps.append(ServeStep(
             step=step, seconds=seconds, active_slots=tuple(active_slots),
             n_slots=n_slots, blocks_in_use=blocks_in_use, n_blocks=n_blocks,
             prefills=prefills, prefill_chunks=prefill_chunks,
             new_tokens=new_tokens,
-            resident_bytes=resident_bytes, capacity_bytes=capacity_bytes))
+            resident_bytes=resident_bytes, capacity_bytes=capacity_bytes,
+            resident_by_group=dict(resident_by_group or {})))
         # chunk work units are not emitted tokens — only completed prefills
         # (one greedy token each) and decode tokens count
         self._total_tokens += new_tokens + prefills
@@ -124,6 +133,9 @@ class ServeTelemetry:
         self._max_concurrency = max(self._max_concurrency, len(active_slots))
         self._peak_resident_bytes = max(self._peak_resident_bytes,
                                         resident_bytes)
+        for group, nbytes in (resident_by_group or {}).items():
+            self._peak_group_bytes[group] = max(
+                self._peak_group_bytes.get(group, 0), nbytes)
 
     # -- aggregates -----------------------------------------------------------
     def _recent(self) -> list:
@@ -139,12 +151,12 @@ class ServeTelemetry:
             len(s.active_slots) / s.n_slots for s in recent if s.n_slots)
 
     def cache_pressure(self) -> float:
-        """Mean fraction of KV-cache blocks allocated over the recent window."""
-        recent = self._recent()
-        if not recent:
-            return 0.0
-        return statistics.mean(
-            s.blocks_in_use / s.n_blocks for s in recent if s.n_blocks)
+        """Mean fraction of KV-cache blocks allocated over the recent
+        window (0 when no step had a block pool — e.g. a pure-recurrent
+        arch whose paged layout holds only state slots)."""
+        vals = [s.blocks_in_use / s.n_blocks for s in self._recent()
+                if s.n_blocks]
+        return statistics.mean(vals) if vals else 0.0
 
     def peak_cache_pressure(self) -> float:
         return self._peak_pressure
@@ -152,6 +164,13 @@ class ServeTelemetry:
     def peak_resident_bytes(self) -> int:
         """Peak physical paged-cache residency (0 in the dense regime)."""
         return self._peak_resident_bytes
+
+    def peak_resident_bytes_by_group(self) -> dict:
+        """Peak residency per layer group ({"global"/"window"/"recurrent"}
+        -> bytes; empty in the dense regime).  The window entry is bounded
+        by O(window) and the recurrent entry by O(n_slots) regardless of
+        generated length — the invariant the window-ring tests assert."""
+        return dict(self._peak_group_bytes)
 
     def max_concurrency(self) -> int:
         return self._max_concurrency

@@ -11,17 +11,32 @@ whose worst case cannot fit, and ``ServeTelemetry`` reports
 HBM bytes) to the scheduling assistants (paper §3) as serving memory
 pressure.
 
+A model's layers are partitioned into *cache groups* (``CacheLayout``,
+built by the engine from ``models.lm.serve_groups``):
+
+* **global** — global-attention K/V (and MLA latents): per-slot block
+  tables that grow with the context, the original paging regime.
+* **window** — sliding-window attention: a per-slot *block ring* indexed by
+  logical block; blocks that fall fully behind ``pos - window`` are freed
+  back to the pool and the published table entry becomes the null page, so
+  a window lane pins O(window) blocks regardless of generated length.
+* **recurrent** — ssd/rglru scan state: O(1) per-slot state slabs, no
+  blocks at all; the allocator accounts these slots (and their bytes)
+  separately from paged blocks.
+
 Two layers:
 
-* ``BlockAllocator`` — pure host bookkeeping (free list + per-slot block
+* ``BlockAllocator`` — pure host bookkeeping (free list + per-slot group
   tables); runs between device steps, no jax in the hot path.
-* ``PagedKVStore`` — the physical ``[n_layers, n_blocks + 1, block_size,
-  n_kv_heads, head_dim]`` K/V page pools the tables index into (the extra
-  trailing page is the *null block*: inactive decode lanes and padded table
-  tails point at it, so their writes land harmlessly and their reads are
-  masked).  The engine threads the pools through its jitted steps and
-  rebinds the store afterwards; ``write_token``/``gather_slot`` are the
-  standalone host-side APIs (tests, debugging, residency accounting).
+* ``PagedKVStore`` — a pair of physical page pools of shape
+  ``[n_layers, n_blocks + 1, block_size, *row]`` the tables index into
+  (the extra trailing page is the *null block*: inactive decode lanes,
+  padded table tails, and freed-behind-window ring entries point at it, so
+  their writes land harmlessly and their reads are masked).  Attention
+  leaves pair K/V pools; MLA leaves pair ckv/krope latent pools.  The
+  engine threads the pools through its jitted steps and rebinds the store
+  afterwards; ``write_token``/``gather_slot`` are the standalone host-side
+  APIs (tests, debugging, residency accounting).
 """
 
 from __future__ import annotations
@@ -47,15 +62,41 @@ class CacheConfig:
         return self.n_blocks
 
 
-class PagedKVStore:
-    """Physical paged KV storage for a stack of attention layers.
+@dataclass(frozen=True)
+class CacheLayout:
+    """Which cache groups a model's layers need, in allocator terms.
 
-    Owns ``k_pages``/``v_pages`` of shape ``[n_layers, n_blocks + 1,
-    block_size, n_kv_heads, head_dim]``.  Page ``n_blocks`` is the null
-    block (see module docstring).  All updates are functional — methods
-    replace ``self.k_pages``/``self.v_pages`` with the updated arrays, so a
-    store can also be *rebound* to pool arrays produced inside a jitted
-    engine step (``from_pools`` / ``rebind``).
+    Built by the engine from the per-layer capability report
+    (``models.lm.serve_groups``) and installed with
+    ``BlockAllocator.set_layout``; the default describes the original
+    global-only regime, which is also what the dense (accounting-only)
+    engine uses.  ``window_cap_blocks`` is the admission price of one
+    window ring: the most blocks a lane can pin simultaneously
+    (``blocks_for(window) + 1``, plus the in-flight chunk during chunked
+    prefill).  ``state_slots``/``state_bytes_per_slot`` describe the
+    recurrent lanes, accounted separately from paged blocks."""
+
+    has_global: bool = True
+    window: int = 0                  # sliding-window width (0 = no group)
+    window_cap_blocks: int = 0
+    state_slots: int = 0             # recurrent lanes (0 = no group)
+    state_bytes_per_slot: int = 0
+    prefill_chunk: int = 0           # chunked prefill (window rings start
+                                     # at block 0 and slide with the chunks)
+
+
+class PagedKVStore:
+    """Physical paged storage for a stack of layers of one cache group.
+
+    Owns a pair of page pools ``k_pages``/``v_pages`` of shape
+    ``[n_layers, n_blocks + 1, block_size, *row]`` — attention leaves pair
+    K/V rows (``row = (n_kv_heads, head_dim)``), MLA leaves pair
+    ckv/krope latent rows (the two pools may have different row widths).
+    Page ``n_blocks`` is the null block (see module docstring).  All
+    updates are functional — methods replace ``self.k_pages``/``self.v_pages``
+    with the updated arrays, so a store can also be *rebound* to pool
+    arrays produced inside a jitted engine step (``from_pools`` /
+    ``rebind``).
     """
 
     def __init__(self, config: CacheConfig, n_layers: int, n_kv_heads: int,
@@ -77,7 +118,8 @@ class PagedKVStore:
         return store
 
     def rebind(self, k_pages, v_pages) -> None:
-        assert k_pages.shape == v_pages.shape, (k_pages.shape, v_pages.shape)
+        assert k_pages.shape[:3] == v_pages.shape[:3], (k_pages.shape,
+                                                        v_pages.shape)
         assert k_pages.shape[1] == self.config.n_blocks + 1, k_pages.shape
         assert k_pages.shape[2] == self.config.block_size, k_pages.shape
         self.k_pages = k_pages
@@ -90,9 +132,10 @@ class PagedKVStore:
 
     @property
     def block_bytes(self) -> int:
-        """HBM bytes one block id pins across all layers (K and V)."""
-        per_page = self.k_pages[:, 0]
-        return 2 * per_page.size * per_page.dtype.itemsize
+        """HBM bytes one block id pins across all layers (both pools)."""
+        per_k, per_v = self.k_pages[:, 0], self.v_pages[:, 0]
+        return per_k.size * per_k.dtype.itemsize + \
+            per_v.size * per_v.dtype.itemsize
 
     @property
     def capacity_bytes(self) -> int:
@@ -100,45 +143,67 @@ class PagedKVStore:
 
     # -- physical access ---------------------------------------------------------
     def write_token(self, table: list, pos: int, k, v) -> None:
-        """Write one token's K/V (``[n_layers, n_kv_heads, head_dim]``) at
-        logical position ``pos`` of the lane backed by ``table``."""
+        """Write one token's rows (``[n_layers, *row]``) at logical
+        position ``pos`` of the lane backed by ``table``."""
         block = table[pos // self.config.block_size]
         off = pos % self.config.block_size
         self.k_pages = self.k_pages.at[:, block, off].set(k)
         self.v_pages = self.v_pages.at[:, block, off].set(v)
 
     def gather_slot(self, table: list, context_len: int):
-        """Reconstruct the lane's logical K/V: ``[n_layers, context_len,
-        n_kv_heads, head_dim]`` each, gathered through ``table``."""
+        """Reconstruct the lane's logical rows: ``[n_layers, context_len,
+        *row]`` each, gathered through ``table``."""
         import jax.numpy as jnp
         idx = jnp.asarray(table, jnp.int32)
-        L, KV, hd = self.n_layers, self.k_pages.shape[3], self.k_pages.shape[4]
-        k = self.k_pages[:, idx].reshape(L, -1, KV, hd)[:, :context_len]
-        v = self.v_pages[:, idx].reshape(L, -1, KV, hd)[:, :context_len]
+        L = self.n_layers
+        k = self.k_pages[:, idx].reshape(
+            (L, -1) + self.k_pages.shape[3:])[:, :context_len]
+        v = self.v_pages[:, idx].reshape(
+            (L, -1) + self.v_pages.shape[3:])[:, :context_len]
         return k, v
 
 
 class BlockAllocator:
-    """Free-list block allocator with per-slot block tables.
+    """Free-list block allocator with per-slot, per-group block tables.
 
-    Optionally carries one or more attached ``PagedKVStore``s (the engine
-    attaches one per attention cache leaf); the allocator then reports
-    physical residency in bytes, and ``write_token``/``gather_slot``
-    resolve a slot's table against the first store.
+    The installed ``CacheLayout`` decides what an admission claims: a
+    growing **global** table (``tables``), a sliding **window** block ring
+    (``window_tables``: logical block -> physical block), and/or a
+    **recurrent state slot** — all drawn from (and accounted against) the
+    same pool, so admission control and the cache-pressure telemetry see
+    every group.  The default layout is global-only (the original regime).
+
+    Optionally carries attached ``PagedKVStore``s tagged with their group
+    (the engine attaches one per pool leaf); the allocator then reports
+    physical residency in bytes — per group via ``resident_bytes_by_group``
+    — and ``write_token``/``gather_slot`` resolve a slot's global table
+    against the first store.
     """
 
     def __init__(self, config: CacheConfig,
                  store: Optional[PagedKVStore] = None):
         self.config = config
+        self.layout = CacheLayout()
         # LIFO free list: reclaimed blocks are reused first (cache-friendly)
         self._free: list[int] = list(range(config.n_blocks - 1, -1, -1))
-        # slot -> ordered block ids backing that slot's cache lane
+        # slot -> ordered block ids backing that slot's global cache lane
         self.tables: dict[int, list[int]] = {}
         # slot -> tokens currently resident (drives the growth math)
         self._tokens: dict[int, int] = {}
+        # slot -> {logical block index: physical block} window ring
+        self.window_tables: dict[int, dict[int, int]] = {}
+        self._state_slots: set[int] = set()
+        self._group_in_use: dict[str, int] = {"global": 0, "window": 0}
         self.stores: list[PagedKVStore] = []
+        self.store_groups: list[str] = []
         if store is not None:
             self.attach_store(store)
+
+    def set_layout(self, layout: CacheLayout) -> None:
+        """Install the engine's cache-group layout (before any admission)."""
+        if self.tables or self.window_tables or self._state_slots:
+            raise ValueError("cannot change layout with live allocations")
+        self.layout = layout
 
     # -- queries ----------------------------------------------------------------
     @property
@@ -157,24 +222,73 @@ class BlockAllocator:
         """Fraction of the block pool currently allocated, in [0, 1]."""
         return self.n_in_use / self.config.n_blocks if self.config.n_blocks else 0.0
 
+    def blocks_needed(self, n_tokens: int) -> int:
+        """Admission price of ``n_tokens`` resident tokens across block
+        groups: global tables grow with the context; a window ring is
+        capped at ``layout.window_cap_blocks`` regardless of length."""
+        need = 0
+        if self.layout.has_global:
+            need += self.config.blocks_for(n_tokens)
+        if self.layout.window:
+            need += min(self.config.blocks_for(n_tokens),
+                        self.layout.window_cap_blocks)
+        return need
+
     def can_allocate(self, n_tokens: int) -> bool:
-        return self.config.blocks_for(n_tokens) <= self.n_free
+        if self.layout.state_slots and \
+                len(self._state_slots) >= self.layout.state_slots:
+            return False
+        return self.blocks_needed(n_tokens) <= self.n_free
+
+    def state_slots_in_use(self) -> int:
+        return len(self._state_slots)
 
     # -- lifecycle ---------------------------------------------------------------
+    def _claim(self, n: int, what: str) -> list[int]:
+        if n > len(self._free):
+            raise MemoryError(f"need {n} blocks for {what}, "
+                              f"{len(self._free)} free")
+        return [self._free.pop() for _ in range(n)]
+
     def allocate(self, slot: int, n_tokens: int) -> list[int]:
-        """Claim blocks for a newly admitted request occupying ``slot``."""
+        """Claim every group's resources for a newly admitted request
+        occupying ``slot``; returns the global block ids (empty when the
+        layout has no global layers)."""
         if slot in self.tables:
             raise ValueError(f"slot {slot} already has an allocation")
-        need = self.config.blocks_for(n_tokens)
-        if need > self.n_free:
+        if not self.can_allocate(n_tokens):
             raise MemoryError(
-                f"need {need} blocks for {n_tokens} tokens, {self.n_free} free")
-        self.tables[slot] = [self._free.pop() for _ in range(need)]
+                f"need {self.blocks_needed(n_tokens)} blocks for {n_tokens} "
+                f"tokens, {self.n_free} free")
+        need = self.config.blocks_for(n_tokens) if self.layout.has_global else 0
+        self.tables[slot] = self._claim(need, f"slot {slot}")
+        self._group_in_use["global"] += need
         self._tokens[slot] = n_tokens
+        if self.layout.window:
+            self._allocate_window(slot, n_tokens)
+        if self.layout.state_slots:
+            self._state_slots.add(slot)
         return list(self.tables[slot])
 
+    def _allocate_window(self, slot: int, n_tokens: int) -> None:
+        """Initial window ring: whole-prompt prefill lands only the last
+        ``window`` positions in the ring, so cover the blocks holding
+        ``[max(0, p - window + 1), p]``; chunked prefill starts at block 0
+        and slides forward with the chunks (``extend_window``)."""
+        bs, W = self.config.block_size, self.layout.window
+        if self.layout.prefill_chunk:
+            p = min(self.layout.prefill_chunk, n_tokens) - 1
+            lo = 0
+        else:
+            p = n_tokens - 1
+            lo = max(0, p - W + 1) // bs
+        blocks = self._claim(p // bs - lo + 1, f"slot {slot} window ring")
+        self.window_tables[slot] = {lo + i: b for i, b in enumerate(blocks)}
+        self._group_in_use["window"] += len(blocks)
+
     def extend(self, slot: int, n_tokens_total: int) -> list[int]:
-        """Grow ``slot``'s table to cover ``n_tokens_total`` resident tokens.
+        """Grow ``slot``'s global table to cover ``n_tokens_total`` resident
+        tokens.
 
         Returns the newly claimed block ids (usually empty — a new block is
         only needed every ``block_size`` decode steps).
@@ -185,28 +299,73 @@ class BlockAllocator:
             raise ValueError(
                 f"slot {slot}: cannot shrink {self._tokens[slot]} -> {n_tokens_total}")
         need = self.config.blocks_for(n_tokens_total) - len(self.tables[slot])
+        if not self.layout.has_global:
+            need = 0
         if need > self.n_free:
             raise MemoryError(
                 f"slot {slot}: need {need} more blocks, {self.n_free} free")
-        fresh = [self._free.pop() for _ in range(need)]
+        fresh = self._claim(max(0, need), f"slot {slot}")
         self.tables[slot].extend(fresh)
+        self._group_in_use["global"] += len(fresh)
         self._tokens[slot] = n_tokens_total
         return fresh
 
+    def extend_window(self, slot: int, n_tokens_total: int,
+                      first_query_pos: Optional[int] = None) -> tuple:
+        """Slide ``slot``'s window ring forward to cover position
+        ``n_tokens_total - 1``: claim blocks up to its logical block, free
+        every block that has fallen fully behind
+        ``first_query_pos - window`` (default: the covered position itself —
+        the decode case; chunked prefill passes the chunk's first row so
+        earlier in-chunk queries keep their window).  Returns
+        ``(fresh, freed)`` physical block id lists; a non-empty either means
+        the published table row must be rebuilt."""
+        if slot not in self.window_tables:
+            raise KeyError(f"slot {slot} has no window ring")
+        bs, W = self.config.block_size, self.layout.window
+        ring = self.window_tables[slot]
+        p = n_tokens_total - 1
+        fq = p if first_query_pos is None else first_query_pos
+        lo = max(0, fq - W + 1) // bs
+        freed = [ring.pop(i) for i in sorted(ring) if i < lo]
+        self._free.extend(reversed(freed))
+        self._group_in_use["window"] -= len(freed)
+        hi = p // bs
+        cur_hi = max(ring, default=lo - 1)
+        fresh = self._claim(max(0, hi - cur_hi), f"slot {slot} window ring")
+        for i, b in enumerate(fresh):
+            ring[cur_hi + 1 + i] = b
+        self._group_in_use["window"] += len(fresh)
+        return fresh, freed
+
     def free_slot(self, slot: int) -> int:
-        """Reclaim every block owned by ``slot`` (EOS / max-tokens). Returns
-        the number of blocks returned to the pool."""
+        """Reclaim every group's resources owned by ``slot`` (EOS /
+        max-tokens). Returns the number of blocks returned to the pool."""
         if slot not in self.tables:
             raise KeyError(f"slot {slot} has no allocation")
         blocks = self.tables.pop(slot)
         self._tokens.pop(slot)
         self._free.extend(reversed(blocks))
+        self._group_in_use["global"] -= len(blocks)
+        ring = self.window_tables.pop(slot, None)
+        if ring:
+            ring_blocks = [ring[i] for i in sorted(ring, reverse=True)]
+            self._free.extend(ring_blocks)
+            self._group_in_use["window"] -= len(ring_blocks)
+            blocks = blocks + ring_blocks
+        self._state_slots.discard(slot)
         return len(blocks)
 
     def check_no_leaks(self) -> None:
         """Invariant check: with no live slots, the whole pool is free."""
         if self.tables:
             raise AssertionError(f"live tables remain: {sorted(self.tables)}")
+        if self.window_tables:
+            raise AssertionError(
+                f"live window rings remain: {sorted(self.window_tables)}")
+        if self._state_slots:
+            raise AssertionError(
+                f"live state slots remain: {sorted(self._state_slots)}")
         if len(self._free) != self.config.n_blocks:
             leaked = self.config.n_blocks - len(self._free)
             raise AssertionError(f"{leaked} blocks leaked")
@@ -214,19 +373,32 @@ class BlockAllocator:
             raise AssertionError("duplicate block ids in free list")
 
     # -- physical store ----------------------------------------------------------
-    def attach_store(self, store: PagedKVStore) -> None:
+    def attach_store(self, store: PagedKVStore, group: str = "global") -> None:
         if store.config.block_size != self.config.block_size or \
                 store.config.n_blocks != self.config.n_blocks:
             raise ValueError("store geometry does not match allocator config")
         self.stores.append(store)
+        self.store_groups.append(group)
 
     def padded_table(self, slot: int, width: int) -> list[int]:
-        """``slot``'s block table padded to ``width`` entries with the null
-        block id (unallocated logical blocks resolve to the scratch page)."""
+        """``slot``'s global block table padded to ``width`` entries with
+        the null block id (unallocated logical blocks resolve to the
+        scratch page)."""
         table = self.tables[slot]
         if len(table) > width:
             raise ValueError(f"table of {len(table)} blocks exceeds width {width}")
         return table + [self.config.null_block] * (width - len(table))
+
+    def padded_window_table(self, slot: int, width: int) -> list[int]:
+        """``slot``'s window ring as a full-width logical table: entry i is
+        the physical block of logical block i, or the null page when i is
+        behind the window (freed) or not yet written."""
+        ring = self.window_tables[slot]
+        if ring and max(ring) >= width:
+            raise ValueError(
+                f"window ring reaches block {max(ring)}, width {width}")
+        null = self.config.null_block
+        return [ring.get(i, null) for i in range(width)]
 
     def write_token(self, slot: int, pos: int, k, v) -> None:
         """Write one token's K/V into ``slot``'s lane via the first store."""
@@ -239,8 +411,30 @@ class BlockAllocator:
         return self.stores[0].gather_slot(self.tables[slot], context_len)
 
     def resident_bytes(self) -> int:
-        """Physical HBM bytes pinned by allocated blocks (0 with no store)."""
-        return self.n_in_use * sum(s.block_bytes for s in self.stores)
+        """Physical HBM bytes pinned by allocated blocks and recurrent
+        state slots (0 with no store attached and no state group)."""
+        return sum(self.resident_bytes_by_group().values())
+
+    def resident_bytes_by_group(self) -> dict[str, int]:
+        """Physical residency split by cache group — what the per-group
+        telemetry reports.  Block groups multiply blocks-in-use by their
+        own stores' per-block bytes; the recurrent group is state slots
+        times the layout's per-slot state bytes."""
+        out: dict[str, int] = {}
+        for group in ("global", "window"):
+            bb = sum(s.block_bytes for s, g in zip(self.stores,
+                                                   self.store_groups)
+                     if g == group)
+            if bb or self._group_in_use[group]:
+                out[group] = self._group_in_use[group] * bb
+        if self.layout.state_slots:
+            out["recurrent"] = len(self._state_slots) * \
+                self.layout.state_bytes_per_slot
+        return out
 
     def capacity_bytes(self) -> int:
-        return self.config.n_blocks * sum(s.block_bytes for s in self.stores)
+        total = self.config.n_blocks * sum(s.block_bytes for s in self.stores)
+        if self.layout.state_slots:
+            total += self.layout.state_slots * \
+                self.layout.state_bytes_per_slot
+        return total

@@ -15,19 +15,30 @@ per-step telemetry (slot occupancy, cache pressure, latency) feeds the paper
 * dense (default) — a vmapped single-request lane over a slot-stacked cache
   tree; every lane carries its own absolute position, so emitted tokens are
   bit-identical to per-request greedy decoding.
-* paged (``paged=True``) — the physical regime: every attention layer's KV
-  lives in shared ``[n_pages, block_size, KV, hd]`` page pools, lanes are
-  carved out by per-slot block tables, and decode is one batched step that
-  writes each lane's token through its table and attends via the
-  gather-based paged kernel.  Token identity is preserved because the
-  gathered view has exactly ``kv_len`` rows (``kv_len % block_size == 0``
-  is enforced) and masked rows contribute exact zeros.
+* paged (``paged=True``) — the physical regime, for **every decoder-only
+  arch**: the per-layer capability report (``lm.serve_groups``) partitions
+  the layers into mixed cache groups — global attention and MLA latents
+  live in shared ``[n_pages, block_size, ...]`` page pools behind growing
+  per-slot block tables; sliding-window layers use the same pools behind
+  per-slot *window block rings* (blocks fully behind ``pos - window`` are
+  freed back to the allocator and the published table entry becomes null);
+  ssd/rglru layers hold O(1) per-slot recurrent state slabs (no blocks),
+  with the allocator accounting those state slots separately.  Decode is
+  one batched step that writes each lane's token through its group tables
+  and attends via the gather-based paged kernel (window-masked for ring
+  layers).  For all-global archs the gathered view has exactly ``kv_len``
+  rows (``kv_len % block_size == 0`` is enforced) and masked rows
+  contribute exact zeros, so tokens are bit-identical to the oracle;
+  window/recurrent archs agree with the oracle to greedy-argmax identity
+  (the reduction orders differ in ulps — see docs/serving.md).
 
 On top of either regime, ``bucket_prompts=True`` pads prefills to
 power-of-two buckets (compile count bounded by the bucket count instead of
-the number of distinct prompt lengths), and ``prefill_chunk=N`` (paged only)
+the number of distinct prompt lengths; recurrent state is frozen past the
+true length via ``valid_len``), and ``prefill_chunk=N`` (paged only)
 splits long prompts into N-token chunks interleaved with decode steps so
-admission never stalls running lanes.
+admission never stalls running lanes — recurrent layers carry their scan
+state across the chunks.
 """
 
 from __future__ import annotations
@@ -45,7 +56,7 @@ from repro.models import lm
 from repro.models.config import ModelConfig
 from repro.runtime.telemetry import ServeTelemetry
 
-from .cache import BlockAllocator, CacheConfig, PagedKVStore
+from .cache import BlockAllocator, CacheConfig, CacheLayout, PagedKVStore
 from .scheduler import ActiveSlot, Request, SlotScheduler
 
 PREFILL_BUCKET_FLOOR = 8
@@ -58,12 +69,20 @@ def bucket_length(n: int, cap: int, floor: int = PREFILL_BUCKET_FLOOR) -> int:
 
 
 def make_prefill_step(cfg: ModelConfig, impl: str = "chunked",
-                      n_groups: int = 1, shard_fn=None, unroll: bool = False):
+                      n_groups: int = 1, shard_fn=None, unroll: bool = False,
+                      moe_lossless=None):
+    """Both engines build this with ``moe_lossless=True``: capacity drops
+    are a training-throughput trade whose victims depend on the batch
+    shape, so a dropped prefill would make emitted tokens depend on bucket
+    padding and chunk boundaries — breaking the engines' token-identity
+    contract.  The dry-run cells keep the default (dropped) capacity —
+    lossless dispatch buffers would distort the 32k-prompt memory
+    analysis."""
     def prefill_step(params, cache, tokens, frontend_emb=None):
         logits, new_cache, _ = lm.forward(
             cfg, params, tokens, frontend_emb=frontend_emb, cache=cache,
             mode="prefill", impl=impl, n_groups=n_groups, shard_fn=shard_fn,
-            unroll=unroll)
+            moe_lossless=moe_lossless, unroll=unroll)
         next_tok = jnp.argmax(logits[:, -1, :cfg.vocab_size],
                               axis=-1).astype(jnp.int32)
         return next_tok, new_cache
@@ -87,13 +106,16 @@ def make_bucketed_prefill_step(cfg: ModelConfig, impl: str = "chunked"):
     """prefill(params, cache, tokens [B, Sb], true_len) -> (next_tok, cache).
 
     The prompt is right-padded to a bucket length Sb; causality makes the
-    logits at ``true_len - 1`` exact, and the padded rows' cache entries are
-    position-invalidated so decode can never attend them.  One compile per
-    bucket instead of one per distinct prompt length.
+    logits at ``true_len - 1`` exact, the padded rows' cache entries are
+    position-invalidated so decode can never attend them, and
+    ``valid_len=true_len`` freezes recurrent (ssd/rglru) state at the real
+    prompt length (and keeps pad rows out of window ring slots).  One
+    compile per bucket instead of one per distinct prompt length.
     """
     def prefill_step(params, cache, tokens, true_len):
         logits, new_cache, _ = lm.forward(
-            cfg, params, tokens, cache=cache, mode="prefill", impl=impl)
+            cfg, params, tokens, cache=cache, mode="prefill", impl=impl,
+            moe_lossless=True, valid_len=true_len)
         last = lax.dynamic_index_in_dim(logits, true_len - 1, axis=1,
                                         keepdims=False)
         next_tok = jnp.argmax(last[:, :cfg.vocab_size],
@@ -103,13 +125,18 @@ def make_bucketed_prefill_step(cfg: ModelConfig, impl: str = "chunked"):
 
 
 def make_paged_decode_step(cfg: ModelConfig, impl: str = "chunked"):
-    """decode(params, caches, toks [B], pos [B], tables [B, W]) ->
-    (next_toks [B], caches). One batched step over every lane; each lane
-    writes its token's K/V through its block table into the shared pools."""
-    def decode_step(params, caches, toks, pos, tables):
+    """decode(params, caches, toks [B], pos [B], tables {group: [B, W]},
+    active [B] bool) -> (next_toks [B], caches). One batched step over every
+    lane; each lane writes its token's rows through its group tables into
+    the shared pools.  ``active`` masks the recurrent state update to the
+    lanes actually decoding — inactive lanes (retired, or mid chunked
+    prefill with carried state) must not absorb their garbage tokens."""
+    def decode_step(params, caches, toks, pos, tables, active):
         logits, new_cache, _ = lm.forward(
             cfg, params, toks[:, None], positions=pos, cache=caches,
-            mode="decode", impl=impl, paged_tables=tables)
+            mode="decode", impl=impl, paged_tables=tables.get("global"),
+            window_tables=tables.get("window"))
+        new_cache = lm.freeze_state_lanes(cfg, new_cache, caches, active)
         next_tok = jnp.argmax(logits[:, -1, :cfg.vocab_size],
                               axis=-1).astype(jnp.int32)
         return next_tok, new_cache
@@ -118,24 +145,36 @@ def make_paged_decode_step(cfg: ModelConfig, impl: str = "chunked"):
 
 def make_chunk_prefill_step(cfg: ModelConfig, chunk: int,
                             impl: str = "chunked"):
-    """chunk(params, caches, tokens [1, C], start, tables [1, W], last_idx)
-    -> (candidate_tok [1], caches).
+    """chunk(params, caches, tokens [1, C], start, rows {group: [W]},
+    last_idx, slot, valid) -> (candidate_tok [1], caches).
 
     Processes one C-token slice of a prompt directly against the paged
-    pools: writes the slice's K/V through the lane's block table, attends
-    causally over everything resident so far, and returns the greedy token
-    read at ``last_idx`` (only meaningful on the final slice).  Fixed C
-    means exactly one compile regardless of prompt lengths.
+    tree: writes the slice's rows through the lane's group tables (global
+    blocks, window ring), threads the lane's recurrent state slab through
+    the slice (``lane_view``/``lane_merge`` — the chunk-carried prefill
+    state), attends causally over everything resident so far, and returns
+    the greedy token read at ``last_idx`` (only meaningful on the final
+    slice).  ``valid`` counts the slice's real rows: pad rows of a final
+    chunk freeze the recurrent state and are redirected to the null page.
+    Fixed C means exactly one compile regardless of prompt lengths.
     """
-    def chunk_step(params, caches, tokens, start, tables, last_idx):
+    def chunk_step(params, caches, tokens, start, rows, last_idx, slot,
+                   valid):
         positions = start + jnp.arange(chunk, dtype=jnp.int32)
-        logits, new_cache, _ = lm.forward(
-            cfg, params, tokens, positions=positions, cache=caches,
-            mode="prefill", impl=impl, paged_tables=tables)
+        g_row = rows.get("global")
+        w_row = rows.get("window")
+        sub = lm.lane_view(cfg, caches, slot)
+        logits, new_sub, _ = lm.forward(
+            cfg, params, tokens, positions=positions, cache=sub,
+            mode="prefill", impl=impl,
+            paged_tables=None if g_row is None else g_row[None],
+            window_tables=None if w_row is None else w_row[None],
+            moe_lossless=True, valid_len=valid)
+        caches = lm.lane_merge(cfg, caches, new_sub, slot)
         last = lax.dynamic_index_in_dim(logits, last_idx, axis=1,
                                         keepdims=False)
         tok = jnp.argmax(last[:, :cfg.vocab_size], axis=-1).astype(jnp.int32)
-        return tok, new_cache
+        return tok, caches
     return chunk_step
 
 
@@ -150,7 +189,8 @@ class Engine:
     impl: str = "chunked"
 
     def __post_init__(self):
-        self._prefill = jax.jit(make_prefill_step(self.cfg, self.impl))
+        self._prefill = jax.jit(make_prefill_step(self.cfg, self.impl,
+                                                  moe_lossless=True))
         self._decode = jax.jit(make_serve_step(self.cfg, self.impl))
 
     def generate(self, prompts: jax.Array, max_new_tokens: int,
@@ -183,14 +223,19 @@ class ContinuousEngine:
 
     Modes (see module docstring and docs/serving.md):
 
-    * ``paged=True`` — physical paged KV cache: shared page pools + per-slot
-      block tables instead of dense per-slot lanes.  Requires an all-global-
-      attention arch and ``kv_len % block_size == 0``.
+    * ``paged=True`` — physical paged cache with mixed layer groups built
+      from the per-layer capability report (``lm.serve_groups``): shared
+      page pools + growing per-slot block tables for global attention and
+      MLA latents, window block rings for sliding-window layers, O(1)
+      per-slot state slabs for ssd/rglru layers.  Works for every
+      decoder-only arch; attention groups require
+      ``kv_len % block_size == 0``.
     * ``bucket_prompts=True`` — pad prefills to power-of-two buckets; the
       prefill compile count is bounded by the bucket count.
     * ``prefill_chunk=N`` — (paged only) split prompts into N-token chunks,
       one chunk per engine step, interleaved with decode of running lanes;
-      exactly one prefill compile regardless of prompt lengths.
+      exactly one prefill compile regardless of prompt lengths.  Recurrent
+      layers carry their scan state across a lane's chunks.
     """
 
     cfg: ModelConfig
@@ -207,33 +252,40 @@ class ContinuousEngine:
     _next_rid: int = field(default=0, repr=False)
 
     def __post_init__(self):
-        if self.cfg.frontend or self.cfg.n_enc_layers:
-            raise NotImplementedError(
-                "ContinuousEngine serves decoder-only archs; use Engine for "
-                "frontend/enc-dec configs")
+        reason = lm.serve_unsupported_reason(self.cfg)
+        if reason is not None:
+            raise NotImplementedError(f"{self.cfg.name}: {reason}")
         if self.prefill_chunk and not self.paged:
             raise ValueError("prefill_chunk requires paged=True (chunks are "
                              "written straight into the page pools)")
-        if (self.paged or self.bucket_prompts) and not lm.supports_paged(self.cfg):
-            raise NotImplementedError(
-                f"{self.cfg.name}: paged / bucketed serving requires an "
-                "all-global-attention arch (window caches evict by position "
-                "and recurrent state absorbs padding irreversibly)")
-        if self.paged and self.kv_len % self.block_size:
+        groups = lm.serve_groups(self.cfg)
+        self._has_global = bool(groups["paged"])
+        self._has_window = bool(groups["window"])
+        self._has_state = bool(groups["recurrent"])
+        has_blocks = self._has_global or self._has_window
+        if self.paged and has_blocks and self.kv_len % self.block_size:
             raise ValueError(
                 f"paged mode needs kv_len ({self.kv_len}) divisible by "
                 f"block_size ({self.block_size}) so the gathered KV view "
                 "matches the dense oracle shape (token identity)")
         blocks_per_slot = -(-self.kv_len // self.block_size)
+        if self.paged:
+            # per-slot block budget by group: global tables grow to the
+            # full context; a window ring is capped at O(window) blocks
+            per_slot = blocks_per_slot if self._has_global else 0
+            per_slot += self._window_cap_blocks()
+            n_blocks = self.n_slots * per_slot
+        else:
+            n_blocks = self.n_slots * blocks_per_slot
         self.allocator = BlockAllocator(CacheConfig(
-            block_size=self.block_size,
-            n_blocks=self.n_slots * blocks_per_slot))
+            block_size=self.block_size, n_blocks=n_blocks))
         self.scheduler = SlotScheduler(self.n_slots, self.allocator,
                                        self.kv_len)
         if self.telemetry is None:
             self.telemetry = ServeTelemetry()
 
-        self._prefill = jax.jit(make_prefill_step(self.cfg, self.impl))
+        self._prefill = jax.jit(make_prefill_step(self.cfg, self.impl,
+                                                  moe_lossless=True))
         self._prefill_b = jax.jit(make_bucketed_prefill_step(self.cfg,
                                                              self.impl))
         # reusable zeroed single-request cache fed to every full prefill
@@ -269,21 +321,55 @@ class ContinuousEngine:
             self._caches = lm.init_slot_caches(self.cfg, self.n_slots,
                                                self.kv_len, self.dtype)
 
+    def _window_cap_blocks(self) -> int:
+        """Most blocks one lane's window ring can pin simultaneously:
+        blocks covering the window span plus block-alignment slack, plus
+        the in-flight slice during chunked prefill — never more than a
+        full-context table."""
+        if not self._has_window:
+            return 0
+        bf = lambda n: -(-n // self.block_size)
+        wc = min(self.kv_len, self.cfg.window_size)
+        cap = bf(wc) + 1 + (bf(self.prefill_chunk) if self.prefill_chunk
+                            else 0)
+        return min(bf(self.kv_len), cap)
+
     def _init_paged(self) -> None:
-        """Physical regime: page pools, block tables, store bindings."""
+        """Physical regime: page pools, per-group block tables, recurrent
+        state slabs, store bindings."""
         cache_cfg = self.allocator.config
         null = cache_cfg.null_block
         self._max_blocks = self.kv_len // self.block_size
         self._caches = lm.init_paged_caches(
-            self.cfg, cache_cfg.n_blocks + 1, self.block_size, self.dtype)
-        # one PagedKVStore per attention cache leaf — the allocator owns the
-        # physical pools between steps (residency telemetry, gather_slot)
-        for _, leaf in lm.paged_cache_leaves(self._caches):
+            self.cfg, self.n_slots, cache_cfg.n_blocks + 1, self.block_size,
+            self.dtype)
+        # one PagedKVStore per pool leaf, tagged with its table group — the
+        # allocator owns the physical pools between steps (per-group
+        # residency telemetry, gather_slot)
+        for group, keys, leaf in lm.paged_cache_leaves(self.cfg,
+                                                       self._caches):
             self.allocator.attach_store(PagedKVStore.from_pools(
-                cache_cfg, leaf["k_pages"], leaf["v_pages"]))
+                cache_cfg, leaf[keys[0]], leaf[keys[1]]), group=group)
+        self.allocator.set_layout(CacheLayout(
+            has_global=self._has_global,
+            window=min(self.kv_len, self.cfg.window_size)
+            if self._has_window else 0,
+            window_cap_blocks=self._window_cap_blocks(),
+            state_slots=self.n_slots if self._has_state else 0,
+            state_bytes_per_slot=lm.state_bytes_per_slot(self.cfg,
+                                                         self._caches)
+            if self._has_state else 0,
+            prefill_chunk=self.prefill_chunk))
         self._null_row = jnp.full((self._max_blocks,), null, jnp.int32)
-        self._tables = jnp.tile(self._null_row[None], (self.n_slots, 1))
-        self._table_rows: dict[int, list] = {}
+        # one published [n_slots, max_blocks] table per block group
+        self._tables: dict[str, jax.Array] = {}
+        if self._has_global:
+            self._tables["global"] = jnp.tile(self._null_row[None],
+                                              (self.n_slots, 1))
+        if self._has_window:
+            self._tables["window"] = jnp.tile(self._null_row[None],
+                                              (self.n_slots, 1))
+        self._rows: dict[int, dict[str, jax.Array]] = {}
         self._host_pos: dict[int, int] = {}
 
         self._decode_p = jax.jit(make_paged_decode_step(self.cfg, self.impl))
@@ -291,23 +377,30 @@ class ContinuousEngine:
             self._chunk = jax.jit(make_chunk_prefill_step(
                 self.cfg, self.prefill_chunk, self.impl))
 
-        def paged_insert(caches, single, table_row, true_len):
+        def paged_insert(caches, single, rows, slot):
             return lm.insert_paged_prompt(
-                caches, single, table_row, true_len,
+                self.cfg, caches, single, rows, slot,
                 block_size=self.block_size, null_block=null)
 
-        def lane_set(toks, pos, tables, slot, tok, start_pos, row):
+        def reset_state(caches, single, slot):
+            return lm.write_state_lanes(self.cfg, caches, single, slot)
+
+        self._reset_state = jax.jit(reset_state)
+
+        def lane_set(toks, pos, tables, slot, tok, start_pos, rows):
+            tables = {g: tables[g].at[slot].set(rows[g]) for g in tables}
             return (toks.at[slot].set(tok), pos.at[slot].set(start_pos),
-                    tables.at[slot].set(row))
+                    tables)
 
         self._insert_p = jax.jit(paged_insert)
         self._lane_set = jax.jit(lane_set)
 
     def _rebind_stores(self) -> None:
         """Hand the post-step pool arrays back to the allocator's stores."""
-        for (_, leaf), store in zip(lm.paged_cache_leaves(self._caches),
-                                    self.allocator.stores):
-            store.rebind(leaf["k_pages"], leaf["v_pages"])
+        for (_, keys, leaf), store in zip(
+                lm.paged_cache_leaves(self.cfg, self._caches),
+                self.allocator.stores):
+            store.rebind(leaf[keys[0]], leaf[keys[1]])
 
     @property
     def now(self) -> int:
@@ -352,14 +445,25 @@ class ContinuousEngine:
                                    jnp.asarray(prompt_len, jnp.int32))
         return self._prefill(self.params, self._fresh, prompt[None], None)
 
+    def _refresh_row(self, slot: int, group: str) -> jax.Array:
+        """Rebuild ``slot``'s published table row for ``group`` from the
+        allocator's current tables."""
+        if group == "global":
+            row = self.allocator.padded_table(slot, self._max_blocks)
+        else:
+            row = self.allocator.padded_window_table(slot, self._max_blocks)
+        arr = jnp.asarray(row, jnp.int32)
+        self._rows[slot][group] = arr
+        return arr
+
     def _activate_lane(self, slot: int, tok, start_pos: int) -> None:
         """Bring a freshly prefilled request online in decode lane ``slot``
-        (paged regime: also publish its block table to the decode step)."""
-        row = jnp.asarray(self._table_rows[slot], jnp.int32)
+        (paged regime: also publish its group table rows to the decode
+        step)."""
         self._toks, self._pos, self._tables = self._lane_set(
             self._toks, self._pos, self._tables,
             jnp.asarray(slot, jnp.int32), tok,
-            jnp.asarray(start_pos, jnp.int32), row)
+            jnp.asarray(start_pos, jnp.int32), self._rows[slot])
         self._host_pos[slot] = start_pos
 
     def _admit_one(self, act: ActiveSlot) -> None:
@@ -374,17 +478,22 @@ class ContinuousEngine:
                 jnp.asarray(prompt_len, jnp.int32))
             act.tokens.append(int(tok[0]))
             return
-        self._table_rows[slot] = self.allocator.padded_table(
-            slot, self._max_blocks)
+        self._rows[slot] = {}
+        for group in self._tables:
+            self._refresh_row(slot, group)
         if self.prefill_chunk:
-            # defer: one chunk per engine step, interleaved with decode
+            # defer: one chunk per engine step, interleaved with decode.
+            # A reused lane still holds the previous occupant's recurrent
+            # state — zero it before the chunks start carrying state in
+            # (full prefill resets it via the insert instead).
+            if self._has_state:
+                self._caches = self._reset_state(
+                    self._caches, self._fresh, jnp.asarray(slot, jnp.int32))
             self._prefilling[slot] = [prompt, 0]
             return
         tok, cache = self._full_prefill(prompt_len, prompt)
-        self._caches = self._insert_p(
-            self._caches, cache,
-            jnp.asarray(self._table_rows[slot], jnp.int32),
-            jnp.asarray(prompt_len, jnp.int32))
+        self._caches = self._insert_p(self._caches, cache, self._rows[slot],
+                                      jnp.asarray(slot, jnp.int32))
         self._activate_lane(slot, tok[0], prompt_len)
         act.tokens.append(int(tok[0]))
 
@@ -396,14 +505,22 @@ class ContinuousEngine:
         start = done * C
         prompt_len = prompt.shape[0]
         piece = prompt[start:start + C]
-        if piece.shape[0] < C:                 # pad final chunk to C
-            piece = jnp.zeros((C,), jnp.int32).at[:piece.shape[0]].set(piece)
+        valid = piece.shape[0]                 # real rows in this slice
+        if valid < C:                          # pad final chunk to C
+            piece = jnp.zeros((C,), jnp.int32).at[:valid].set(piece)
+        if self._has_window:
+            # slide the ring to cover this slice; rows behind the slice's
+            # FIRST query keep their window (freed only once fully behind)
+            fresh, freed = self.allocator.extend_window(
+                slot, min(start + C, prompt_len), first_query_pos=start)
+            if fresh or freed:
+                self._refresh_row(slot, "window")
         last = prompt_len - 1 - start          # only valid on the final chunk
         tok, self._caches = self._chunk(
             self.params, self._caches, piece[None],
-            jnp.asarray(start, jnp.int32),
-            jnp.asarray(self._table_rows[slot], jnp.int32)[None],
-            jnp.asarray(min(max(last, 0), C - 1), jnp.int32))
+            jnp.asarray(start, jnp.int32), self._rows[slot],
+            jnp.asarray(min(max(last, 0), C - 1), jnp.int32),
+            jnp.asarray(slot, jnp.int32), jnp.asarray(valid, jnp.int32))
         self._prefilling[slot][1] = done + 1
         if start + C < prompt_len:
             return False
@@ -413,25 +530,36 @@ class ContinuousEngine:
         return True
 
     def _finish(self, slot: int) -> list:
-        """Retire ``slot`` (reclaims blocks; paged: unmap its table row)."""
+        """Retire ``slot`` (reclaims blocks and its recurrent state slot;
+        paged: unmap its table rows)."""
         act = self.scheduler.finish(slot)
         if self.paged:
-            self._tables = self._tables.at[slot].set(self._null_row)
-            self._table_rows.pop(slot, None)
+            for group in self._tables:
+                self._tables[group] = self._tables[group].at[slot].set(
+                    self._null_row)
+            self._rows.pop(slot, None)
             self._host_pos.pop(slot, None)
         return act.tokens
 
     def _grow_tables(self, decoding: list) -> None:
         """Paged: claim the block backing each lane's next write *before*
         the decode step runs — the write needs a physical destination, so
-        growth is eager here where dense accounting could stay lazy."""
+        growth is eager here where dense accounting could stay lazy.
+        Window rings additionally free every block that has fallen fully
+        behind ``pos - window`` back to the allocator."""
         for slot in decoding:
-            fresh = self.allocator.extend(slot, self._host_pos[slot] + 1)
-            if fresh:
-                row = self.allocator.padded_table(slot, self._max_blocks)
-                self._table_rows[slot] = row
-                self._tables = self._tables.at[slot].set(
-                    jnp.asarray(row, jnp.int32))
+            n_res = self._host_pos[slot] + 1
+            if self._has_global:
+                if self.allocator.extend(slot, n_res):
+                    row = self._refresh_row(slot, "global")
+                    self._tables["global"] = \
+                        self._tables["global"].at[slot].set(row)
+            if self._has_window:
+                fresh, freed = self.allocator.extend_window(slot, n_res)
+                if fresh or freed:
+                    row = self._refresh_row(slot, "window")
+                    self._tables["window"] = \
+                        self._tables["window"].at[slot].set(row)
 
     def run(self, max_steps: Optional[int] = None) -> dict:
         """Serve every queued request to completion. Returns
@@ -483,9 +611,11 @@ class ContinuousEngine:
 
             if self.paged:
                 self._grow_tables(decoding)
+                active = np.zeros((self.n_slots,), bool)
+                active[decoding] = True
                 toks, self._caches = self._decode_p(
                     self.params, self._caches, self._toks, self._pos,
-                    self._tables)
+                    self._tables, jnp.asarray(active))
             else:
                 toks, self._caches = self._decode(self.params, self._caches,
                                                   self._toks, self._pos)
@@ -515,11 +645,13 @@ class ContinuousEngine:
 
     def _record_step(self, now: int, t0: float, active_slots, prefills: int,
                      chunks: int, new_tokens: int) -> None:
+        by_group = self.allocator.resident_bytes_by_group()
         self.telemetry.record_step(
             step=now, seconds=time.perf_counter() - t0,
             active_slots=active_slots, n_slots=self.n_slots,
             blocks_in_use=self.allocator.n_in_use,
             n_blocks=self.allocator.n_blocks,
             prefills=prefills, prefill_chunks=chunks, new_tokens=new_tokens,
-            resident_bytes=self.allocator.resident_bytes(),
-            capacity_bytes=self.allocator.capacity_bytes())
+            resident_bytes=sum(by_group.values()),
+            capacity_bytes=self.allocator.capacity_bytes(),
+            resident_by_group=by_group if self.paged else None)

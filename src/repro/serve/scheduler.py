@@ -4,9 +4,12 @@ The engine owns ``n_slots`` decode lanes.  The scheduler admits pending
 requests into free lanes *mid-stream* — a request arriving while other slots
 are decoding joins the running batch at its next step instead of waiting for
 a batch boundary.  Admission is strict FCFS (no head-of-line skipping, so
-completion order is predictable) and is gated on the block allocator: a
-request is only admitted when its worst case (prompt + max_new_tokens) fits
-in ``kv_len`` and its prompt's blocks are free.
+completion order is predictable) and is gated on the block allocator, which
+prices the request across every cache group its ``CacheLayout`` declares:
+global block tables grow with the prompt, a window ring is priced at its
+O(window) block cap, and recurrent layers need a free state slot.  A request
+is only admitted when its worst case (prompt + max_new_tokens) fits in
+``kv_len`` and that price is free right now.
 
 Arrivals are measured in engine steps (one step = one batched decode), which
 keeps tests and benchmarks deterministic; the launcher maps wall-clock
@@ -92,8 +95,10 @@ class SlotScheduler:
     # -- admission ---------------------------------------------------------------
     def admit(self, now: int) -> list[ActiveSlot]:
         """Admit arrived requests into free slots, FCFS, until the first one
-        that has not arrived yet or does not fit. Prefill blocks (prompt + the
-        first generated token) are allocated here; decode growth is lazy."""
+        that has not arrived yet or does not fit. Prefill resources (prompt
+        blocks + the first generated token's slot, the window ring, the
+        recurrent state slot — whatever the allocator's layout prices) are
+        allocated here; decode growth is lazy."""
         admitted: list[ActiveSlot] = []
         while self._pending and self._free_slots:
             req = self._pending[0]

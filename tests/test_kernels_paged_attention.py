@@ -92,6 +92,54 @@ def test_ops_dispatch_is_jittable_and_deterministic():
     assert jnp.all(a == b)
 
 
+def test_ref_window_mask_matches_dense_sliding_window():
+    """The window mask over the gathered view must be bitwise equal to
+    dense sliding-window attention over the same rows — the window block
+    rings' decode path rests on this (rows resident in a not-yet-freed
+    block but behind the window contribute exact zeros)."""
+    key = jax.random.PRNGKey(6)
+    B, H, KV, hd, bs = 2, 4, 2, 16, 8
+    kv_len = 32
+    kp, vp = _pool(key, 9, bs, KV, hd)
+    q = jax.random.normal(jax.random.fold_in(key, 13), (B, H, hd))
+    tables = jnp.array([[0, 1, 2, 3], [4, 5, 6, 7]], jnp.int32)
+    lens = jnp.array([20, 31], jnp.int32)
+    window = 11
+
+    out = ref.reference(q[:, None], kp, vp, tables, lens,
+                        q_positions=(lens - 1)[:, None], window=window)[:, 0]
+    for b in range(B):
+        L = int(lens[b])
+        kd = kp[tables[b]].reshape(-1, KV, hd)[None]
+        vd = vp[tables[b]].reshape(-1, KV, hd)[None]
+        cpos = jnp.where(jnp.arange(kv_len) < L, jnp.arange(kv_len), -1)
+        o = blocks.attention(q[b][None, None], kd, vd,
+                             q_positions=jnp.array([L - 1]),
+                             k_positions=cpos, causal=True, window=window,
+                             impl="chunked")
+        assert jnp.all(o[0, 0] == out[b]), b
+
+
+@pytest.mark.parametrize("window", [5, 8, 64])
+def test_pallas_kernel_window_matches_ref(window):
+    """The in-kernel window mask (positions at or below lens-1-window are
+    excluded) against the gather oracle, across window widths smaller and
+    larger than the context."""
+    key = jax.random.PRNGKey(7)
+    B, H, KV, hd, bs, W = 3, 4, 2, 32, 8, 5
+    kp, vp = _pool(key, 17, bs, KV, hd)
+    q = jax.random.normal(jax.random.fold_in(key, 15), (B, H, hd))
+    tables = jax.random.permutation(
+        jax.random.fold_in(key, 16), 16)[:B * W].reshape(B, W).astype(jnp.int32)
+    lens = jnp.array([3, 21, 38], jnp.int32)
+    out_ref = ref.reference(q[:, None], kp, vp, tables, lens,
+                            q_positions=(lens - 1)[:, None],
+                            window=window)[:, 0]
+    out_pal = ops.paged_attention(q, kp, vp, tables, lens, window=window,
+                                  interpret=True)
+    assert jnp.max(jnp.abs(out_ref - out_pal)) < 1e-5
+
+
 def test_chunked_q_positions_match_full_prefill():
     """Multi-row queries (chunked prefill) over the paged view must equal
     one full causal attention over the same rows."""

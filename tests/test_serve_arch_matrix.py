@@ -1,0 +1,147 @@
+"""Cross-arch decode-identity matrix — the acceptance bar for
+architecture-general paged serving.
+
+Every decoder-only arch in ``repro.configs`` (reduced dims) is driven
+through the continuous-batching engine in four regimes — dense, paged,
+paged+bucketed prompts, paged+chunked prefill (and the combination) — and
+must emit, per request, exactly the tokens the static ``Engine`` oracle
+produces for that request alone.  The paged regime builds mixed layer
+groups from the per-layer capability report (``lm.serve_groups``): global
+attention and MLA latents page through growing block tables, sliding-window
+layers through window block rings, and ssd/rglru layers carry O(1)
+recurrent state per slot (chunk-carried across prefill chunks).
+
+Enc-dec / frontend archs are the only unsupported configs; they must fail
+with one precise capability error (asserted below).
+
+The two plain-global archs that duplicate tinyllama's structure at larger
+dims are ``slow``-marked; CI's ``-m "not slow"`` selection runs the
+reduced-dims subset covering every layer-group combination.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get
+from repro.models import lm
+from repro.serve import ContinuousEngine, Engine
+
+KV_LEN = 64
+PROMPT_LENS = (5, 9, 13, 33)        # spans buckets, chunks, and (reduced)
+BUDGETS = (4, 6, 5, 3)              # window widths; 33 > window 32
+
+MODES = {
+    "dense": {},
+    # dense bucketing was forbidden for window/recurrent archs by the old
+    # whole-model gate; it now rides the same valid_len machinery
+    "dense_bucket": {"bucket_prompts": True},
+    "paged": {"paged": True},
+    "paged_bucket": {"paged": True, "bucket_prompts": True},
+    # 8 divides kv_len, 7 does not — the combined mode also exercises the
+    # pad-rows-past-the-table path
+    "paged_chunk": {"paged": True, "prefill_chunk": 8},
+    "paged_bucket_chunk": {"paged": True, "bucket_prompts": True,
+                           "prefill_chunk": 7},
+}
+
+FAST_ARCHS = ("tinyllama-1.1b", "gemma2-9b", "mixtral-8x7b",
+              "recurrentgemma-2b", "mamba2-370m", "deepseek-v2-lite-16b")
+SLOW_ARCHS = ("command-r-35b", "minicpm-2b")   # plain-global duplicates
+UNSUPPORTED = ("phi-3-vision-4.2b", "seamless-m4t-medium")
+
+# (arch, setup) cache: the oracle decode is identical across the four
+# engine modes, so compute it once per arch
+_SETUP: dict = {}
+
+
+def _setup(arch):
+    if arch not in _SETUP:
+        cfg = get(arch).reduced()
+        key = jax.random.PRNGKey(0)
+        params = lm.init_params(cfg, key, jnp.float32)
+        prompts = [jax.random.randint(jax.random.fold_in(key, i), (n,), 0,
+                                      cfg.vocab_size)
+                   for i, n in enumerate(PROMPT_LENS)]
+        ref = Engine(cfg, params, kv_len=KV_LEN)
+        expects = [ref.generate(p[None], max_new_tokens=b)[0].tolist()
+                   for p, b in zip(prompts, BUDGETS)]
+        _SETUP[arch] = (cfg, params, prompts, expects)
+    return _SETUP[arch]
+
+
+def _run_identity(arch, mode):
+    cfg, params, prompts, expects = _setup(arch)
+    eng = ContinuousEngine(cfg, params, kv_len=KV_LEN, n_slots=2,
+                           **MODES[mode])
+    for i, p in enumerate(prompts):
+        eng.submit(p, max_new_tokens=BUDGETS[i], rid=i, arrival=i)
+    results = eng.run()
+    for i in range(len(prompts)):
+        assert results[i] == expects[i], (arch, mode, i)
+    eng.allocator.check_no_leaks()
+    assert eng.allocator.resident_bytes() == 0
+    # aggregates must be computable for every layout, including the
+    # zero-block pool of a pure-recurrent arch
+    assert 0.0 <= eng.telemetry.cache_pressure() <= 1.0
+    assert 0.0 <= eng.telemetry.occupancy() <= 1.0
+
+    if MODES[mode].get("paged"):
+        # the telemetry must see every layer group the capability report
+        # declares (lm.serve_groups -> allocator group accounting)
+        groups = lm.serve_groups(cfg)
+        peaks = eng.telemetry.peak_resident_bytes_by_group()
+        if groups["paged"]:
+            assert peaks.get("global", 0) > 0, (arch, mode, peaks)
+        if groups["window"]:
+            assert peaks.get("window", 0) > 0, (arch, mode, peaks)
+        if groups["recurrent"]:
+            assert peaks.get("recurrent", 0) > 0, (arch, mode, peaks)
+
+
+@pytest.mark.parametrize("mode", sorted(MODES))
+@pytest.mark.parametrize("arch", FAST_ARCHS)
+def test_decode_identity(arch, mode):
+    _run_identity(arch, mode)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode", sorted(MODES))
+@pytest.mark.parametrize("arch", SLOW_ARCHS)
+def test_decode_identity_slow(arch, mode):
+    _run_identity(arch, mode)
+
+
+def test_arch_partition_covers_registry():
+    """Every registered arch is either in the matrix or explicitly
+    unsupported — a new config cannot silently skip the identity bar."""
+    covered = set(FAST_ARCHS) | set(SLOW_ARCHS) | set(UNSUPPORTED)
+    assert covered == set(ARCH_IDS), set(ARCH_IDS) ^ covered
+
+
+@pytest.mark.parametrize("arch,fragment", [
+    ("phi-3-vision-4.2b", "modality frontend"),
+    ("seamless-m4t-medium", "encoder-decoder stack"),
+])
+def test_unsupported_archs_raise_precise_capability_error(arch, fragment):
+    cfg = get(arch).reduced()
+    with pytest.raises(NotImplementedError) as ei:
+        ContinuousEngine(cfg, params={}, kv_len=32, paged=True)
+    msg = str(ei.value)
+    assert msg.startswith(cfg.name), msg
+    assert "decoder-only token LMs" in msg, msg
+    assert fragment in msg, msg
+    assert "use the static Engine" in msg, msg
+
+
+def test_serve_groups_report_matches_layer_specs():
+    """The per-layer capability report partitions exactly the layer list."""
+    for arch in ARCH_IDS:
+        cfg = get(arch).reduced()
+        groups = lm.serve_groups(cfg)
+        seen = sorted(i for idxs in groups.values() for i in idxs)
+        assert seen == list(range(cfg.n_layers)), arch
+        for li, spec in enumerate(cfg.layers()):
+            group = {"global": "paged", "mla": "paged", "local": "window",
+                     "ssd": "recurrent", "rglru": "recurrent"}[spec.mixer]
+            assert li in groups[group], (arch, li, spec)

@@ -8,8 +8,9 @@ import pytest
 
 from repro.configs import get
 from repro.models import lm
-from repro.serve import (BlockAllocator, CacheConfig, ContinuousEngine,
-                         Engine, PagedKVStore, bucket_length)
+from repro.serve import (BlockAllocator, CacheConfig, CacheLayout,
+                         ContinuousEngine, Engine, PagedKVStore,
+                         bucket_length)
 
 
 # =============================================================================
@@ -67,10 +68,18 @@ def test_padded_table_uses_null_block():
 # engine gating
 # =============================================================================
 
-def test_paged_requires_global_attention_arch():
-    cfg = get("mamba2-370m").reduced()               # pure SSD, no attn
-    with pytest.raises(NotImplementedError):
-        ContinuousEngine(cfg, params={}, kv_len=32, paged=True)
+def test_paged_serves_every_decoder_only_arch():
+    """The old whole-model gate is gone: paged mode now builds mixed layer
+    groups from the per-layer capability report, so recurrent/window archs
+    construct (token identity is the arch-matrix suite's job)."""
+    for arch in ("mamba2-370m", "mixtral-8x7b", "recurrentgemma-2b"):
+        cfg = get(arch).reduced()
+        key = jax.random.PRNGKey(0)
+        params = lm.init_params(cfg, key, jnp.float32)
+        eng = ContinuousEngine(cfg, params, kv_len=32, paged=True)
+        groups = lm.serve_groups(cfg)
+        assert eng._has_window == bool(groups["window"]), arch
+        assert eng._has_state == bool(groups["recurrent"]), arch
 
 
 def test_chunked_prefill_requires_paged():
@@ -224,6 +233,126 @@ def test_chunked_prefill_only_request():
     ref = Engine(cfg, params, kv_len=32)
     assert results[0] == ref.generate(prompt[None], 1)[0].tolist()
     eng.allocator.check_no_leaks()
+
+
+# =============================================================================
+# window block rings (sliding-window layer group)
+# =============================================================================
+
+def _window_alloc(n_blocks=16, bs=4, window=8, cap=3, chunk=0):
+    a = BlockAllocator(CacheConfig(block_size=bs, n_blocks=n_blocks))
+    a.set_layout(CacheLayout(has_global=False, window=window,
+                             window_cap_blocks=cap, prefill_chunk=chunk))
+    return a
+
+
+def test_window_ring_slides_and_stays_bounded():
+    """Decoding forward forever keeps the ring at O(window) blocks: blocks
+    fully behind ``pos - window`` are freed, the retained logical range is
+    exactly the window's covering blocks."""
+    a = _window_alloc(bs=4, window=8, cap=3)
+    a.allocate(0, 6)                       # positions 0..5 -> blocks 0..1
+    assert sorted(a.window_tables[0]) == [0, 1]
+    peak = 0
+    for pos in range(6, 64):
+        a.extend_window(0, pos + 1)
+        peak = max(peak, len(a.window_tables[0]))
+        assert len(a.window_tables[0]) <= 3          # blocks_for(8) + 1
+    lo = (63 - 8 + 1) // 4
+    assert sorted(a.window_tables[0]) == list(range(lo, 63 // 4 + 1))
+    assert peak == 3
+    ring_size = len(a.window_tables[0])
+    assert a.free_slot(0) == ring_size     # every ring block reclaimed
+    a.check_no_leaks()
+
+
+def test_window_ring_freed_blocks_are_reused():
+    """A pool barely larger than one ring serves an arbitrarily long decode:
+    every freed-behind-window block cycles back through the free list."""
+    a = _window_alloc(n_blocks=4, bs=4, window=8, cap=3)
+    a.allocate(0, 6)
+    freed_ids: list[int] = []
+    claims = 0
+    for pos in range(6, 60):               # 15 logical blocks >> 4 physical
+        fresh, freed = a.extend_window(0, pos + 1)
+        freed_ids += freed
+        claims += len(fresh)
+        assert set(a.window_tables[0].values()) <= set(range(4))
+    assert len(freed_ids) >= 12            # the ring really slid
+    # far more claims than the pool holds: freed-behind-window blocks came
+    # back through the free list (LIFO — a freed id is the next handed out)
+    assert claims > a.n_blocks
+    assert set(freed_ids) <= set(range(4))
+    a.free_slot(0)
+    a.check_no_leaks()
+
+
+def test_window_ring_random_churn_never_leaks():
+    """Random admission/decode-length/retire churn across slots: terminal
+    state always returns the pool to fully-free with unique ids."""
+    import random
+
+    rng = random.Random(7)
+    for trial in range(10):
+        a = _window_alloc(n_blocks=32, bs=4, window=12, cap=5)
+        live: dict[int, int] = {}
+        next_slot = 0
+        for _ in range(300):
+            op = rng.random()
+            if op < 0.35 and len(live) < 6:
+                n = rng.randint(1, 10)
+                if a.can_allocate(n):
+                    a.allocate(next_slot, n)
+                    live[next_slot] = n
+                    next_slot += 1
+            elif op < 0.8 and live:
+                slot = rng.choice(sorted(live))
+                live[slot] += rng.randint(1, 5)
+                a.extend_window(slot, live[slot])
+            elif live:
+                slot = rng.choice(sorted(live))
+                a.free_slot(slot)
+                del live[slot]
+        for slot in sorted(live):
+            a.free_slot(slot)
+        a.check_no_leaks()
+
+
+def test_window_ring_chunked_layout_starts_at_block_zero():
+    """With chunked prefill the ring must cover the first chunk's writes
+    (block 0 upward), not the prompt's final window — early chunk rows land
+    before the window of the last prompt position."""
+    a = _window_alloc(bs=4, window=8, cap=5, chunk=8)
+    a.allocate(0, 30)                      # prompt 29 + first token
+    assert sorted(a.window_tables[0]) == [0, 1]      # first chunk: rows 0..7
+    a.extend_window(0, 16, first_query_pos=8)        # second chunk: rows 8..15
+    assert 0 in a.window_tables[0]         # pos 1 still in window of query 8
+    a.extend_window(0, 24, first_query_pos=16)       # third chunk
+    assert 0 not in a.window_tables[0]     # block 0 now fully behind
+    a.free_slot(0)
+    a.check_no_leaks()
+
+
+def test_window_residency_bounded_by_window_not_generated_length():
+    """Engine-level invariant: a sliding-window arch's peak window-group
+    residency is the same for a short and a long generation (O(window)),
+    and never exceeds the ring cap."""
+    cfg = get("mixtral-8x7b").reduced()    # every layer is sliding-window
+    key = jax.random.PRNGKey(0)
+    params = lm.init_params(cfg, key, jnp.float32)
+    prompt = jax.random.randint(key, (6,), 0, cfg.vocab_size)
+    peaks = []
+    eng = None
+    for budget in (40, 90):
+        eng = ContinuousEngine(cfg, params, kv_len=128, n_slots=1,
+                               paged=True)
+        eng.submit(prompt, max_new_tokens=budget, rid=0)
+        eng.run()
+        eng.allocator.check_no_leaks()
+        peaks.append(eng.telemetry.peak_resident_bytes_by_group()["window"])
+    assert peaks[0] == peaks[1]
+    block_bytes = sum(s.block_bytes for s in eng.allocator.stores)
+    assert peaks[1] <= eng._window_cap_blocks() * block_bytes
 
 
 def test_paged_slot_reuse_after_eos():
