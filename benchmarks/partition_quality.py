@@ -11,8 +11,8 @@ from __future__ import annotations
 
 import time
 
-from repro.configs import ARCH_IDS, get
-from repro.core import (CostModel, balance_stats, build_graph, cut_bytes,
+from repro.configs import get
+from repro.core import (CostModel, balance_stats, build_graph,
                         homogeneous_devices, multilevel_partition, partition)
 from repro.models.config import SHAPES
 

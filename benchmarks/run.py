@@ -7,7 +7,6 @@ present; run ``python -m repro.launch.dryrun --all`` first to populate it.
 
 from __future__ import annotations
 
-import sys
 import traceback
 
 

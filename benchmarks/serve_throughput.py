@@ -19,11 +19,15 @@ and reports the prefill compile counts (the quantity bucketing bounds).
 
     PYTHONPATH=src python -m benchmarks.serve_throughput            # full
     PYTHONPATH=src python -m benchmarks.serve_throughput --smoke    # CI
+    PYTHONPATH=src python -m benchmarks.serve_throughput --smoke \
+        --json serve-smoke.json                 # CI artifact (machine-readable)
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import time
 
 import jax
@@ -37,6 +41,17 @@ from repro.serve import ContinuousEngine, Engine
 def _trace(key, cfg, n_requests: int, prompt_len: int):
     return [jax.random.randint(jax.random.fold_in(key, i), (prompt_len,), 0,
                                cfg.vocab_size)
+            for i in range(n_requests)]
+
+
+def _fe_trace(key, cfg, n_requests: int):
+    """Per-request frontend embeddings for VLM / enc-dec archs (None
+    entries for decoder-only token LMs)."""
+    if not (cfg.frontend or cfg.n_enc_layers):
+        return [None] * n_requests
+    return [jax.random.normal(jax.random.fold_in(key, 10_000 + i),
+                              (cfg.frontend_tokens, cfg.frontend_dim),
+                              jnp.float32)
             for i in range(n_requests)]
 
 
@@ -121,17 +136,19 @@ def run(arch: str = "tinyllama-1.1b", n_requests: int = 12, n_slots: int = 4,
 
 
 def _run_continuous(cfg, params, prompts, budgets, kv_len, n_slots,
-                    stagger, name, **engine_kw) -> dict:
+                    stagger, name, fes=None, **engine_kw) -> dict:
     """Drive one continuous-engine trace; returns a result row."""
     eng = ContinuousEngine(cfg, params, kv_len=kv_len, n_slots=n_slots,
                            **engine_kw)
-    eng.submit(prompts[0], max_new_tokens=2, rid="warmup")   # compile warmup
+    fes = fes or [None] * len(prompts)
+    eng.submit(prompts[0], max_new_tokens=2, rid="warmup",
+               frontend_emb=fes[0])                          # compile warmup
     eng.run()
     eng.telemetry.reset()
     base = eng.now
     for i, p in enumerate(prompts):
         eng.submit(p, max_new_tokens=budgets[i], rid=i,
-                   arrival=base + i * stagger)
+                   arrival=base + i * stagger, frontend_emb=fes[i])
     t0 = time.perf_counter()
     results = eng.run()
     wall = time.perf_counter() - t0
@@ -157,21 +174,24 @@ def run_paged(arch: str = "tinyllama-1.1b", n_requests: int = 8,
     """Dense (accounting-only) vs physical paged cache on one trace.
 
     Tokens are identical by construction (both regimes decode each lane's
-    greedy argmax over the same resident context — including window-ring
-    and recurrent-state layer groups); the comparison is decode-step
-    latency and what the telemetry can see — the paged rows report real
-    block/state residency, the dense rows report 0.
+    greedy argmax over the same resident context — including window-ring,
+    recurrent-state and static cross-KV layer groups); the comparison is
+    decode-step latency and what the telemetry can see — the paged rows
+    report real block/state residency, the dense rows report 0.  VLM /
+    enc-dec archs get per-request frontend embeddings.
     """
     cfg = get(arch).reduced()
     key = jax.random.PRNGKey(0)
     params = lm.init_params(cfg, key, jnp.float32)
     prompts = _trace(key, cfg, n_requests, prompt_len=8)
+    fes = _fe_trace(key, cfg, n_requests)
     budgets = [(8, 16, 24, 32)[i % 4] for i in range(n_requests)]
 
     dense = _run_continuous(cfg, params, prompts, budgets, kv_len, n_slots,
-                            stagger, f"serve_dense_{arch}")
+                            stagger, f"serve_dense_{arch}", fes=fes)
     paged = _run_continuous(cfg, params, prompts, budgets, kv_len, n_slots,
-                            stagger, f"serve_paged_{arch}", paged=True)
+                            stagger, f"serve_paged_{arch}", fes=fes,
+                            paged=True)
     assert dense.pop("results") == paged.pop("results"), \
         "paged regime diverged from dense tokens"
     return [dense, paged]
@@ -208,34 +228,66 @@ def _print_rows(rows: list[dict]) -> None:
         print(f"{r['name']},{r['us_per_call']:.0f},{derived}")
 
 
+def _write_json(path: str, rows: list[dict]) -> None:
+    """Machine-readable results file (uploaded as a CI artifact): the
+    result rows plus enough environment context to compare runs."""
+    doc = {
+        "benchmark": "serve_throughput",
+        "backend": jax.default_backend(),
+        "python": platform.python_version(),
+        "rows": rows,
+    }
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump(doc, fh, indent=2, sort_keys=True)
+    print(f"wrote {len(rows)} rows -> {path}")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny traces (CI: keeps the benchmark importable "
                          "and the engine paths exercised) — paper-mlp plus "
-                         "one window arch and one recurrent arch through "
-                         "the paged path (mixed layer groups)")
+                         "one window arch, one recurrent arch, one enc-dec "
+                         "arch and one VLM arch through the paged path "
+                         "(mixed layer groups incl. static cross-KV)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the result rows to PATH as JSON "
+                         "(CI uploads it as a workflow artifact)")
     args = ap.parse_args(argv)
+    all_rows: list[dict] = []
+
+    def emit(rows: list[dict]) -> None:
+        _print_rows(rows)
+        all_rows.extend(rows)
+
     print("name,us_per_call,derived")
     if args.smoke:
-        _print_rows(run_paged("paper-mlp", n_requests=3, n_slots=2,
-                              kv_len=48))
-        # mixed layer groups: a sliding-window arch (window block rings)
-        # and a recurrent arch (O(1) state slots) — run_paged asserts the
-        # paged tokens match the dense regime's
-        _print_rows(run_paged("gemma2-9b", n_requests=2, n_slots=2,
-                              kv_len=48))
-        _print_rows(run_paged("recurrentgemma-2b", n_requests=2, n_slots=2,
-                              kv_len=48))
-        _print_rows(run_bucketed("paper-mlp", n_requests=4, n_slots=2,
-                                 kv_len=48))
+        emit(run_paged("paper-mlp", n_requests=3, n_slots=2, kv_len=48))
+        # mixed layer groups: a sliding-window arch (window block rings),
+        # a recurrent arch (O(1) state slots), an enc-dec arch (static
+        # cross-KV block sets) and a VLM arch (frontend rows in the
+        # decoder cache: 40 + 8 frontend rows = 48) — run_paged asserts
+        # the paged tokens match the dense regime's
+        emit(run_paged("gemma2-9b", n_requests=2, n_slots=2, kv_len=48))
+        emit(run_paged("recurrentgemma-2b", n_requests=2, n_slots=2,
+                       kv_len=48))
+        emit(run_paged("seamless-m4t-medium", n_requests=2, n_slots=2,
+                       kv_len=48))
+        emit(run_paged("phi-3-vision-4.2b", n_requests=2, n_slots=2,
+                       kv_len=40))
+        emit(run_bucketed("paper-mlp", n_requests=4, n_slots=2, kv_len=48))
+        if args.json:
+            _write_json(args.json, all_rows)
         return
     for r in run():
+        all_rows.append(r)
         print(f"{r['name']},{r['us_per_call']:.0f},"
               f"tok_s={r['tok_per_sec']:.1f};makespan={r['makespan_s']:.2f}s;"
               f"occ={r['occupancy']:.2f}")
-    _print_rows(run_paged())
-    _print_rows(run_bucketed())
+    emit(run_paged())
+    emit(run_bucketed())
+    if args.json:
+        _write_json(args.json, all_rows)
 
 
 if __name__ == "__main__":

@@ -12,7 +12,6 @@ Runs in seconds on CPU — no devices needed (pure planning).
 
 from repro.configs import get
 from repro.core import (AssistantConfig, CostModel, build_graph,
-                        cut_bytes, heterogeneous_devices,
                         homogeneous_devices, modeled_step_time, partition,
                         plan_model, run_adaptation)
 from repro.models.config import SHAPES

@@ -11,7 +11,6 @@ restart + telemetry are exercised — kill it mid-run and rerun with
 
 import argparse
 
-from repro.configs import get
 from repro.launch import train as train_launcher
 
 
@@ -24,7 +23,6 @@ def main():
     args = ap.parse_args()
 
     import repro.configs.tinyllama_1_1b as t
-    from repro.models.config import ModelConfig
 
     if args.full_100m:
         cfg = t.CONFIG.replace(n_layers=12, d_model=768, n_heads=12,

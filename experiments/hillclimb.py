@@ -13,8 +13,6 @@ import argparse
 import json
 import time
 
-import jax
-
 from repro import configs
 from repro.launch.dryrun import lower_cell
 from repro.launch.mesh import make_production_mesh

@@ -21,7 +21,7 @@ from repro.core import plan_model
 from repro.launch.mesh import make_production_mesh
 from repro.models.config import SHAPES
 from repro.optim import adamw
-from repro.roofline import analyze, PEAK_FLOPS
+from repro.roofline import analyze
 from repro.train.pipeline import make_pipeline_train_step
 
 

@@ -14,7 +14,7 @@ variables never move except through the explicit resharding path.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Iterable, Iterator, Optional
+from typing import Iterator, Optional
 
 # Node resource tags (paper §3) — which resource bottlenecks the op.
 TAG_COMPUTE = "compute-bound"

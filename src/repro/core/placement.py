@@ -16,8 +16,6 @@ and check divisibility before sharding (fall back to replication), so every
 
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

@@ -12,7 +12,6 @@ from functools import partial
 
 import jax
 
-from . import ref
 from .rglru_scan import rglru_scan_fwd
 
 

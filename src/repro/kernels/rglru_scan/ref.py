@@ -3,7 +3,6 @@ h_t = a_t * h_{t-1} + b_t (elementwise, per channel)."""
 
 from __future__ import annotations
 
-import jax.numpy as jnp
 from jax import lax
 
 

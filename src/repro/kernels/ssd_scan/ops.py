@@ -13,7 +13,6 @@ from functools import partial
 
 import jax
 
-from . import ref
 from .ssd_scan import ssd_scan_fwd
 
 

@@ -53,11 +53,15 @@ def _continuous(args, cfg, params, key):
                            prefill_chunk=args.chunk_prefill,
                            dtype=jnp.float32 if args.reduced else jnp.bfloat16)
     # staggered arrivals: request i becomes admissible at step i * stagger
+    needs_fe = bool(cfg.frontend or cfg.n_enc_layers)
     for i in range(args.requests):
         prompt = jax.random.randint(jax.random.fold_in(key, i),
                                     (args.prompt_len,), 0, cfg.vocab_size)
+        fe = (jax.random.normal(jax.random.fold_in(key, 10_000 + i),
+                                (cfg.frontend_tokens, cfg.frontend_dim),
+                                jnp.float32) if needs_fe else None)
         eng.submit(prompt, max_new_tokens=args.max_new, rid=i,
-                   arrival=i * args.stagger)
+                   arrival=i * args.stagger, frontend_emb=fe)
     t0 = time.time()
     results = eng.run()
     dt = time.time() - t0
@@ -117,9 +121,9 @@ def main(argv=None):
                     help="continuous: arrival gap between requests, in steps")
     ap.add_argument("--paged", action="store_true",
                     help="continuous: physical paged cache (block-table "
-                         "decode; any decoder-only arch — mixed layer "
-                         "groups: global tables / window rings / recurrent "
-                         "state slots)")
+                         "decode; any arch — mixed layer groups: global "
+                         "tables / window rings / recurrent state slots / "
+                         "static enc-dec cross block sets)")
     ap.add_argument("--bucket", action="store_true",
                     help="continuous: pad prefills to power-of-two buckets "
                          "(bounds prefill compile count)")

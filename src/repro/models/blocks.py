@@ -16,7 +16,6 @@ rolling window cache (local / SWA) addressed at ``pos % window``.
 
 from __future__ import annotations
 
-import dataclasses
 import functools
 import math
 from typing import Optional

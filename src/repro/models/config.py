@@ -16,7 +16,7 @@ so that XLA compiles one body per layer class instead of one per layer.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 # Mixer kinds. "global"/"local" are softmax attention (local = sliding window),

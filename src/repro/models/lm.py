@@ -15,7 +15,6 @@ layers and 512 devices.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Optional
 
 import jax
@@ -147,18 +146,11 @@ def write_slot_cache(caches: dict, single: dict, slot) -> dict:
 
 def serve_unsupported_reason(cfg: ModelConfig) -> Optional[str]:
     """One precise capability reason when a config cannot be served by the
-    continuous-batching engine at all, else None.  Decoder-only token LMs
-    (any mixer mix) are servable; the encoder stack / modality frontend
-    families need per-request encoder inputs the request trace does not
-    carry, so they stay on the static ``Engine``."""
-    if cfg.n_enc_layers:
-        return ("continuous serving supports decoder-only token LMs; this "
-                "config has an encoder-decoder stack (cross-attention needs "
-                "per-request encoder outputs) — use the static Engine")
-    if cfg.frontend:
-        return ("continuous serving supports decoder-only token LMs; this "
-                "config has a modality frontend (prefill needs per-request "
-                "frontend embeddings) — use the static Engine")
+    continuous-batching engine at all, else None.  Every registered family
+    is servable: decoder-only token LMs (any mixer mix), modality-frontend
+    archs (requests carry their precomputed frontend embeddings), and
+    encoder-decoder stacks (the encoder runs once at admission and its
+    cross-attention KV is paged as a read-only static block set)."""
     return None
 
 
@@ -176,12 +168,23 @@ def serve_groups(cfg: ModelConfig) -> dict[str, tuple[int, ...]]:
 
     This replaces the old whole-model ``supports_paged`` boolean gate — the
     engine consumes it to build mixed layer groups (global-paged block
-    tables / window block rings / recurrent state slots) so that every
-    decoder-only arch serves under ``paged=True``."""
+    tables / window block rings / recurrent state slots / static cross
+    block sets) so that every arch serves under ``paged=True``.
+
+    The mixer keys ("paged"/"window"/"recurrent") partition the layer
+    list.  "cross" is an *overlay*, not part of the partition: every
+    decoder layer of an enc-dec stack carries cross-attention on top of
+    its self-mixer, so its indices repeat the mixer keys'.  A modality
+    frontend (VLM) contributes no group of its own — its projected rows
+    enter the decoder sequence and their K/V pages through the normal
+    self-attention groups."""
     out: dict[str, list[int]] = {"paged": [], "window": [], "recurrent": []}
     for li, spec in enumerate(cfg.layers()):
         out[_MIXER_GROUP[spec.mixer]].append(li)
-    return {k: tuple(v) for k, v in out.items()}
+    groups = {k: tuple(v) for k, v in out.items()}
+    groups["cross"] = (tuple(range(cfg.n_layers)) if cfg.n_enc_layers
+                       else ())
+    return groups
 
 
 def init_paged_caches(cfg: ModelConfig, n_slots: int, n_pages: int,
@@ -195,12 +198,11 @@ def init_paged_caches(cfg: ModelConfig, n_slots: int, n_pages: int,
     * sliding-window attention — the same pool shape, addressed through
       window ring tables (entries behind the window are null);
     * ssd/rglru — slot-stacked O(1) recurrent state ``[repeats, n_slots,
-      ...]`` (one lane per slot, no blocks).
+      ...]`` (one lane per slot, no blocks);
+    * enc-dec cross attention — every decoder layer additionally carries
+      an ``xattn`` K/V page pool, addressed through per-slot *static*
+      cross tables (written once at admission, never extended).
     """
-    reason = serve_unsupported_reason(cfg)
-    if reason is not None:
-        raise NotImplementedError(f"{cfg.name}: {reason}")
-
     def stack(leaf: dict, repeats: int) -> dict:
         return jax.tree.map(
             lambda x: jnp.broadcast_to(x, (repeats,) + x.shape).copy(), leaf)
@@ -221,6 +223,9 @@ def init_paged_caches(cfg: ModelConfig, n_slots: int, n_pages: int,
                 assert spec.mixer == "rglru", spec.mixer
                 leaf = {"rglru": rglru_mod.init_rglru_cache(cfg, n_slots,
                                                             dtype)}
+            if cfg.n_enc_layers:
+                leaf["xattn"] = blocks.init_paged_attn_cache(
+                    cfg, n_pages, block_size, dtype)
             seg_c[f"c{ci}"] = stack(leaf, seg.repeats)
         cache[f"seg{si}"] = seg_c
     return cache
@@ -264,6 +269,8 @@ def paged_cache_leaves(cfg: ModelConfig, caches: dict) -> list[tuple]:
             out.append((group, ("k_pages", "v_pages"), entry["attn"]))
         elif spec.mixer == "mla":
             out.append(("global", ("ckv_pages", "krope_pages"), entry["mla"]))
+        if "xattn" in entry:
+            out.append(("cross", ("k_pages", "v_pages"), entry["xattn"]))
     return out
 
 
@@ -290,7 +297,7 @@ def lane_view(cfg: ModelConfig, caches: dict, slot) -> dict:
     ``slot`` may be traced — one compile covers all lanes."""
     def walk(spec: LayerSpec, entry: dict) -> dict:
         if spec.mixer in ("ssd", "rglru"):
-            return {spec.mixer: jax.tree.map(
+            return {**entry, spec.mixer: jax.tree.map(
                 lambda x: lax.dynamic_slice_in_dim(x, slot, 1, axis=1),
                 entry[spec.mixer])}
         return entry
@@ -304,8 +311,8 @@ def lane_merge(cfg: ModelConfig, caches: dict, updated: dict, slot) -> dict:
     state leaves are scattered into lane ``slot``."""
     def walk(spec: LayerSpec, full: dict, upd: dict) -> dict:
         if spec.mixer in ("ssd", "rglru"):
-            return {spec.mixer: _scatter_state(full[spec.mixer],
-                                               upd[spec.mixer], slot)}
+            return {**upd, spec.mixer: _scatter_state(full[spec.mixer],
+                                                      upd[spec.mixer], slot)}
         return upd
 
     return _map_entries(cfg, walk, caches, updated)
@@ -319,8 +326,8 @@ def write_state_lanes(cfg: ModelConfig, caches: dict, single: dict,
     lane's state before chunked prefill starts carrying state into it."""
     def walk(spec: LayerSpec, full: dict, one: dict) -> dict:
         if spec.mixer in ("ssd", "rglru"):
-            return {spec.mixer: _scatter_state(full[spec.mixer],
-                                               one[spec.mixer], slot)}
+            return {**full, spec.mixer: _scatter_state(full[spec.mixer],
+                                                       one[spec.mixer], slot)}
         return full
 
     return _map_entries(cfg, walk, caches, single)
@@ -343,11 +350,29 @@ def freeze_state_lanes(cfg: ModelConfig, new_caches: dict, old_caches: dict,
                 mask = active.reshape((1, active.shape[0]) +
                                       (1,) * (n.ndim - 2))
                 return jnp.where(mask, n, o)
-            return {spec.mixer: jax.tree.map(sel, new_e[spec.mixer],
-                                             old_e[spec.mixer])}
+            return {**new_e, spec.mixer: jax.tree.map(sel, new_e[spec.mixer],
+                                                      old_e[spec.mixer])}
         return new_e
 
     return _map_entries(cfg, walk, new_caches, old_caches)
+
+
+def _scatter_rows(pages, row_tbl, cpos, rows, *, block_size: int,
+                  null_block: int):
+    """Write per-position rows into a page pool through one table row.
+
+    ``pages``: [repeats, n_pages, block_size, *row]; ``row_tbl``: [W] the
+    lane's physical blocks; ``cpos``: [S] absolute cache positions (-1 =
+    invalid); ``rows``: [repeats, S, *row].  Rows whose position is -1 or
+    whose block is not covered by the table are redirected to the null
+    page."""
+    width = row_tbl.shape[0]
+    blk = jnp.clip(jnp.where(cpos >= 0, cpos // block_size, 0),
+                   0, width - 1)
+    ok = (cpos >= 0) & ((cpos // block_size) < width)
+    phys = jnp.where(ok, row_tbl[blk], null_block)
+    off = jnp.where(cpos >= 0, cpos % block_size, 0)
+    return pages.at[:, phys, off].set(rows)
 
 
 def insert_paged_prompt(cfg: ModelConfig, caches: dict, single: dict,
@@ -361,41 +386,118 @@ def insert_paged_prompt(cfg: ModelConfig, caches: dict, single: dict,
     ``tables["window"]``) at their absolute cache positions — rows whose
     position is -1 (bucket padding, empty slots) or whose block is not
     covered by the table (behind the window ring) are redirected to the
-    null page; ssd/rglru state is inserted into lane ``slot``.  The pools'
-    other lanes are untouched, so admission never perturbs running
-    requests."""
+    null page; cross-attention K/V (enc-dec) lands in the slot's static
+    cross block set (``tables["cross"]``) at positions ``0..F-1``;
+    ssd/rglru state is inserted into lane ``slot``.  The pools' other
+    lanes are untouched, so admission never perturbs running requests."""
     def scatter(pages, row_tbl, cpos, rows):
-        width = row_tbl.shape[0]
-        blk = jnp.clip(jnp.where(cpos >= 0, cpos // block_size, 0),
-                       0, width - 1)
-        ok = (cpos >= 0) & ((cpos // block_size) < width)
-        phys = jnp.where(ok, row_tbl[blk], null_block)
-        off = jnp.where(cpos >= 0, cpos % block_size, 0)
-        return pages.at[:, phys, off].set(rows)
+        return _scatter_rows(pages, row_tbl, cpos, rows,
+                             block_size=block_size, null_block=null_block)
 
     def walk(spec: LayerSpec, full: dict, one: dict) -> dict:
         if spec.mixer in ("global", "local"):
             row = tables["window" if spec.mixer == "local" else "global"]
             leaf, sl = full["attn"], one["attn"]
             cpos = sl["pos"][0]                # identical across repeats
-            return {"attn": {
+            out = {"attn": {
                 "k_pages": scatter(leaf["k_pages"], row, cpos, sl["k"][:, 0]),
                 "v_pages": scatter(leaf["v_pages"], row, cpos, sl["v"][:, 0]),
             }}
-        if spec.mixer == "mla":
+        elif spec.mixer == "mla":
             leaf, sl = full["mla"], one["mla"]
             cpos = sl["pos"][0]
-            return {"mla": {
+            out = {"mla": {
                 "ckv_pages": scatter(leaf["ckv_pages"], tables["global"],
                                      cpos, sl["ckv"][:, 0]),
                 "krope_pages": scatter(leaf["krope_pages"], tables["global"],
                                        cpos, sl["krope"][:, 0]),
             }}
-        # ssd/rglru: O(1) recurrent state into the lane
-        return {spec.mixer: _scatter_state(full[spec.mixer],
-                                           one[spec.mixer], slot)}
+        else:
+            # ssd/rglru: O(1) recurrent state into the lane
+            out = {spec.mixer: _scatter_state(full[spec.mixer],
+                                              one[spec.mixer], slot)}
+        if "xattn" in full:
+            leaf, sl = full["xattn"], one["xattn"]
+            fpos = jnp.arange(sl["k"].shape[2], dtype=jnp.int32)
+            out["xattn"] = {
+                "k_pages": scatter(leaf["k_pages"], tables["cross"], fpos,
+                                   sl["k"][:, 0]),
+                "v_pages": scatter(leaf["v_pages"], tables["cross"], fpos,
+                                   sl["v"][:, 0]),
+            }
+        return out
 
     return _map_entries(cfg, walk, caches, single)
+
+
+def encode_cross_single(cfg: ModelConfig, params: dict, frontend_emb,
+                        *, unroll: bool = False) -> dict:
+    """Encode-at-admission for the chunked-prefill path: run the encoder
+    once over one request's frame embeddings ([1, F, frontend_dim]) and
+    project every decoder layer's cross-attention K/V.  Returns a tree
+    shaped like the dense single-request cache restricted to its
+    ``xattn`` leaves ({"k"/"v": [repeats, 1, F, KV, hd]}) —
+    ``insert_cross_rows`` scatters it into the static cross block set.
+    (The full-prefill admission path needs neither: its dense prefill
+    already computes the encoder and the per-layer cross K/V.)"""
+    enc_out = _encode(cfg, params, frontend_emb, remat=False,
+                      unroll=unroll)
+    B, F, _ = enc_out.shape
+
+    def project(xp: dict) -> dict:
+        he = rms_norm(enc_out, xp["ln"], cfg.norm_eps)
+        xk = (he @ xp["wk"]).reshape(B, F, cfg.n_kv_heads, cfg.head_dim)
+        xv = (he @ xp["wv"]).reshape(B, F, cfg.n_kv_heads, cfg.head_dim)
+        return {"k": xk, "v": xv}
+
+    out: dict = {}
+    for si, seg in enumerate(cfg.segments()):
+        out[f"seg{si}"] = {
+            f"c{ci}": {"xattn": jax.vmap(project)(
+                params[f"seg{si}"][f"c{ci}"]["xattn"])}
+            for ci in range(len(seg.cycle))}
+    return out
+
+
+def insert_cross_rows(cfg: ModelConfig, caches: dict, cross_single: dict,
+                      table, *, block_size: int, null_block: int) -> dict:
+    """Scatter one request's projected cross-attention K/V rows
+    (``encode_cross_single``) into the cross page pools through its static
+    cross table; every non-cross leaf passes through untouched."""
+    def walk(spec: LayerSpec, full: dict, one: dict) -> dict:
+        if "xattn" not in one:
+            return full
+        leaf, sl = full["xattn"], one["xattn"]
+        fpos = jnp.arange(sl["k"].shape[2], dtype=jnp.int32)
+        return {**full, "xattn": {
+            "k_pages": _scatter_rows(leaf["k_pages"], table, fpos,
+                                     sl["k"][:, 0], block_size=block_size,
+                                     null_block=null_block),
+            "v_pages": _scatter_rows(leaf["v_pages"], table, fpos,
+                                     sl["v"][:, 0], block_size=block_size,
+                                     null_block=null_block),
+        }}
+
+    return _map_entries(cfg, walk, caches, cross_single)
+
+
+def embed_prompt_rows(cfg: ModelConfig, params: dict, tokens,
+                      frontend_emb=None):
+    """Embedding rows for one request's full decoder input, exactly as
+    ``forward`` would embed them: token embeddings (emb-scaled), with the
+    projected frontend rows prepended for a modality-frontend arch.
+    ``tokens``: [S]; ``frontend_emb``: [F, frontend_dim].  Returns
+    [F + S, d_model].  The chunked-prefill path slices these precomputed
+    rows into fixed-size chunks — a chunk may straddle the frontend/token
+    boundary, which token ids alone cannot express."""
+    h = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.emb_scale:
+        h = h * jnp.asarray(math.sqrt(cfg.d_model), h.dtype)
+    if cfg.frontend and not cfg.n_enc_layers:
+        assert frontend_emb is not None
+        fe = frontend_emb.astype(h.dtype) @ params["frontend_proj"]
+        h = jnp.concatenate([fe, h], axis=0)
+    return h
 
 
 def mask_cache_positions(cache: dict, true_len) -> dict:
@@ -423,8 +525,8 @@ def _apply_layer(cfg: ModelConfig, spec: LayerSpec, p: dict, h, *,
                  positions, cache: Optional[dict], enc_out, impl: str,
                  n_groups: int, capacity_factor: float = 1.25,
                  moe_lossless: bool = False, unroll: bool = False,
-                 paged_tables=None, window_tables=None, valid_len=None,
-                 shard_fn=None):
+                 paged_tables=None, window_tables=None, cross_tables=None,
+                 valid_len=None, shard_fn=None):
     """One layer. Returns (h, new_cache_or_None, aux)."""
     aux = jnp.zeros((), jnp.float32)
     new_cache: dict = {}
@@ -463,7 +565,24 @@ def _apply_layer(cfg: ModelConfig, spec: LayerSpec, p: dict, h, *,
     if "xattn" in p:  # enc-dec cross attention
         F = cfg.frontend_tokens
         k_pos = jnp.arange(F, dtype=jnp.int32)
-        if enc_out is not None:  # train/prefill: project encoder output
+        xc = cache.get("xattn") if cache is not None else None
+        if xc is not None and "k_pages" in xc:
+            # paged: gather the static cross block set written at
+            # admission (read-only — the pools pass through untouched).
+            # Tail rows past F land on the null page; k_pos = -1 masks
+            # them to exact zeros, so the reduction matches the dense
+            # oracle's F-row cross attention bitwise.
+            assert cross_tables is not None, "paged cross KV needs tables"
+            kp, vp = xc["k_pages"], xc["v_pages"]
+            bs = kp.shape[1]
+            B_l = cross_tables.shape[0]
+            Lc = cross_tables.shape[1] * bs
+            xk = kp[cross_tables].reshape((B_l, Lc) + kp.shape[2:])
+            xv = vp[cross_tables].reshape((B_l, Lc) + vp.shape[2:])
+            j = jnp.arange(Lc, dtype=jnp.int32)
+            k_pos = jnp.where(j < F, j, -1)
+            new_cache["xattn"] = xc
+        elif enc_out is not None:  # train/prefill: project encoder output
             xp = p["xattn"]
             he = rms_norm(enc_out, xp["ln"], cfg.norm_eps)
             B, Fs, _ = he.shape
@@ -471,10 +590,11 @@ def _apply_layer(cfg: ModelConfig, spec: LayerSpec, p: dict, h, *,
             xv = (he @ xp["wv"]).reshape(B, Fs, cfg.n_kv_heads, cfg.head_dim)
             if cache is not None:
                 new_cache["xattn"] = {"k": xk, "v": xv}
-        else:  # decode: cached cross kv
-            xk, xv = cache["xattn"]["k"], cache["xattn"]["v"]
-            if cache is not None:
-                new_cache["xattn"] = {"k": xk, "v": xv}
+        else:  # decode / chunked prefill: cached cross kv
+            assert xc is not None, \
+                "enc-dec needs frontend_emb or a populated cross-KV cache"
+            xk, xv = xc["k"], xc["v"]
+            new_cache["xattn"] = {"k": xk, "v": xv}
         h, _ = blocks.attn_layer(cfg, p["xattn"], h, local=False,
                                  positions=positions,
                                  kv_override=(xk, xv, k_pos), impl=impl,
@@ -494,8 +614,8 @@ def _run_segment(cfg: ModelConfig, seg: Segment, seg_p: dict, h, *,
                  positions, seg_cache, enc_out, impl: str, n_groups: int,
                  remat: bool, capacity_factor: float = 1.25,
                  moe_lossless: bool = False, unroll: bool = False,
-                 paged_tables=None, window_tables=None, valid_len=None,
-                 shard_fn=None):
+                 paged_tables=None, window_tables=None, cross_tables=None,
+                 valid_len=None, shard_fn=None):
     def body(carry, xs):
         hh = carry
         ps, cs = xs
@@ -512,6 +632,7 @@ def _run_segment(cfg: ModelConfig, seg: Segment, seg_p: dict, h, *,
                                      unroll=unroll,
                                      paged_tables=paged_tables,
                                      window_tables=window_tables,
+                                     cross_tables=cross_tables,
                                      valid_len=valid_len,
                                      shard_fn=shard_fn)
             aux = aux + a
@@ -526,9 +647,40 @@ def _run_segment(cfg: ModelConfig, seg: Segment, seg_p: dict, h, *,
     return h, new_caches, jnp.sum(auxs)
 
 
+def _encode(cfg: ModelConfig, params: dict, frontend_emb, *,
+            remat: bool, unroll: bool):
+    """Bidirectional encoder stack (non-causal self-attention + FFN) over
+    stub frame embeddings [B, F, frontend_dim]; returns [B, F, d_model]."""
+    he = frontend_emb.astype(params["enc_frontend"].dtype) \
+        @ params["enc_frontend"]
+    B, F = he.shape[0], he.shape[1]
+    e_pos = jnp.arange(F, dtype=jnp.int32)
+
+    def enc_body2(carry, ps):
+        hh = carry
+        pa = ps["attn"]
+        hn = rms_norm(hh, pa["ln"], cfg.norm_eps)
+        q = (hn @ pa["wq"]).reshape(B, F, cfg.n_heads, cfg.head_dim)
+        k = (hn @ pa["wk"]).reshape(B, F, cfg.n_kv_heads, cfg.head_dim)
+        v = (hn @ pa["wv"]).reshape(B, F, cfg.n_kv_heads, cfg.head_dim)
+        q = blocks.apply_rope(q, e_pos, cfg.rope_theta)
+        k = blocks.apply_rope(k, e_pos, cfg.rope_theta)
+        o = blocks.attention(q, k, v, q_positions=e_pos, k_positions=e_pos,
+                             causal=False, impl="chunked", unroll=unroll)
+        hh = hh + o.reshape(B, F, cfg.q_dim) @ pa["wo"]
+        hh = blocks.ffn_layer(cfg, ps["ffn"], hh)
+        return hh, None
+
+    enc_body2 = jax.checkpoint(enc_body2) if remat else enc_body2
+    he, _ = lax.scan(enc_body2, he, params["enc"],
+                     unroll=cfg.n_enc_layers if unroll else 1)
+    return rms_norm(he, params["enc_final_norm"], cfg.norm_eps)
+
+
 def forward(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
             positions: Optional[jax.Array] = None,
             frontend_emb: Optional[jax.Array] = None,
+            input_embeds: Optional[jax.Array] = None,
             cache: Optional[dict] = None,
             mode: str = "train", impl: str = "chunked",
             n_groups: int = 1, remat: Optional[bool] = None,
@@ -536,6 +688,7 @@ def forward(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
             moe_lossless: Optional[bool] = None,
             paged_tables: Optional[jax.Array] = None,
             window_tables: Optional[jax.Array] = None,
+            cross_tables: Optional[jax.Array] = None,
             valid_len=None,
             shard_fn=None, unroll: bool = False):
     """Returns (logits, new_cache_or_None, aux_loss).
@@ -544,11 +697,17 @@ def forward(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
     positions: [S] absolute positions (decode: scalar array). Defaults to
       arange over the model sequence (frontend tokens first for VLM).
     frontend_emb: [B, F, frontend_dim] stub embeddings (VLM/audio).
+    input_embeds: [B, S, d_model] precomputed decoder input rows
+      (``embed_prompt_rows``) replacing the embed lookup — the chunked
+      prefill path of a frontend arch feeds chunk slices that may straddle
+      the frontend/token boundary; ``tokens`` is ignored.
     paged_tables: [B, max_blocks] block tables when ``cache`` is the paged
       tree from ``init_paged_caches`` (decode: positions is then [B]
       per-lane; chunk prefill: B == 1, positions the chunk's [S] rows).
     window_tables: [B, max_blocks] window ring tables for sliding-window
       layers in the paged regime (entries behind the window are null).
+    cross_tables: [B, cross_blocks] static cross-KV tables for enc-dec
+      archs in the paged regime (written once at admission, read-only).
     valid_len: prefill only — tokens at positions >= valid_len are padding
       (bucketed prefill tails, final prefill chunks); attention caches
       must not let them displace real rows and recurrent state freezes
@@ -560,48 +719,36 @@ def forward(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
         moe_lossless = decode  # decode groups are tiny; avoid capacity drops
     if shard_fn is None:
         shard_fn = lambda x, kind: x
-    B, S = tokens.shape
+    B, S = tokens.shape if input_embeds is None else input_embeds.shape[:2]
 
     # ---- encoder (enc-dec archs) -------------------------------------------
+    # Serving reads cached cross KV instead of re-encoding: decode and
+    # chunked prefill run with frontend_emb=None (encode-at-admission).
     enc_out = None
-    if cfg.n_enc_layers and not decode:
-        assert frontend_emb is not None
-        he = frontend_emb.astype(params["enc_frontend"].dtype) @ params["enc_frontend"]
-        F = he.shape[1]
-        e_pos = jnp.arange(F, dtype=jnp.int32)
-
-        # bidirectional encoder layer (non-causal self-attention + FFN)
-        def enc_body2(carry, ps):
-            hh = carry
-            pa = ps["attn"]
-            hn = rms_norm(hh, pa["ln"], cfg.norm_eps)
-            q = (hn @ pa["wq"]).reshape(B, F, cfg.n_heads, cfg.head_dim)
-            k = (hn @ pa["wk"]).reshape(B, F, cfg.n_kv_heads, cfg.head_dim)
-            v = (hn @ pa["wv"]).reshape(B, F, cfg.n_kv_heads, cfg.head_dim)
-            q = blocks.apply_rope(q, e_pos, cfg.rope_theta)
-            k = blocks.apply_rope(k, e_pos, cfg.rope_theta)
-            o = blocks.attention(q, k, v, q_positions=e_pos, k_positions=e_pos,
-                                 causal=False, impl="chunked", unroll=unroll)
-            hh = hh + o.reshape(B, F, cfg.q_dim) @ pa["wo"]
-            hh = blocks.ffn_layer(cfg, ps["ffn"], hh)
-            return hh, None
-
-        enc_body2 = jax.checkpoint(enc_body2) if remat else enc_body2
-        he, _ = lax.scan(enc_body2, he, params["enc"],
-                         unroll=cfg.n_enc_layers if unroll else 1)
-        enc_out = rms_norm(he, params["enc_final_norm"], cfg.norm_eps)
+    if cfg.n_enc_layers and not decode and frontend_emb is not None:
+        enc_out = _encode(cfg, params, frontend_emb, remat=remat,
+                          unroll=unroll)
+    if cfg.n_enc_layers and not decode and enc_out is None:
+        # only the serving chunk-prefill path may run an encoder-less
+        # prefill, and it always carries the paged cross tables; anything
+        # else would silently cross-attend to zero-initialized K/V
+        assert cross_tables is not None, \
+            "enc-dec train/prefill needs frontend_emb"
 
     # ---- token embedding ------------------------------------------------------
-    h = jnp.take(params["embed"], tokens, axis=0)
-    if cfg.emb_scale:
-        h = h * jnp.asarray(math.sqrt(cfg.d_model), h.dtype)
+    if input_embeds is not None:
+        h = input_embeds
+    else:
+        h = jnp.take(params["embed"], tokens, axis=0)
+        if cfg.emb_scale:
+            h = h * jnp.asarray(math.sqrt(cfg.d_model), h.dtype)
 
-    # VLM: prepend projected frontend embeddings
-    if cfg.frontend and not cfg.n_enc_layers and not decode:
-        assert frontend_emb is not None
-        fe = frontend_emb.astype(h.dtype) @ params["frontend_proj"]
-        h = jnp.concatenate([fe, h], axis=1)
-        S = h.shape[1]
+        # VLM: prepend projected frontend embeddings
+        if cfg.frontend and not cfg.n_enc_layers and not decode:
+            assert frontend_emb is not None
+            fe = frontend_emb.astype(h.dtype) @ params["frontend_proj"]
+            h = jnp.concatenate([fe, h], axis=1)
+            S = h.shape[1]
 
     if positions is None:
         positions = (jnp.arange(S, dtype=jnp.int32) if not decode
@@ -619,7 +766,8 @@ def forward(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
             n_groups=n_groups, remat=remat, capacity_factor=capacity_factor,
             moe_lossless=moe_lossless, unroll=unroll,
             paged_tables=paged_tables, window_tables=window_tables,
-            valid_len=valid_len, shard_fn=shard_fn)
+            cross_tables=cross_tables, valid_len=valid_len,
+            shard_fn=shard_fn)
         h = shard_fn(h, "residual")
         aux_total = aux_total + aux
         if ncs is not None:

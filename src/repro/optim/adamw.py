@@ -8,7 +8,6 @@ state across the ``data`` axis (ZeRO-1) where leaf dims divide.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,6 @@ The paper's compiler/assistant split maps naturally onto elastic training:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
 
 from repro.core import plan_model, run_adaptation, AssistantConfig
 from repro.core.planner import Plan

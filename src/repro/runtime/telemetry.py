@@ -67,9 +67,11 @@ class ServeStep:
     resident_bytes: int = 0
     capacity_bytes: int = 0
     # per-layer-group residency split (paged regime): {"global": bytes,
-    # "window": bytes, "recurrent": bytes} — window rings stay O(window)
-    # and recurrent slots O(1) regardless of generated length, which this
-    # field lets the assistants (and the invariant tests) observe
+    # "window": bytes, "recurrent": bytes, "cross": bytes} — window rings
+    # stay O(window), recurrent slots O(1), and enc-dec cross block sets
+    # flat (static, written once at admission) regardless of generated
+    # length, which this field lets the assistants (and the invariant
+    # tests) observe
     resident_by_group: dict = field(default_factory=dict)
 
 
@@ -166,10 +168,13 @@ class ServeTelemetry:
         return self._peak_resident_bytes
 
     def peak_resident_bytes_by_group(self) -> dict:
-        """Peak residency per layer group ({"global"/"window"/"recurrent"}
-        -> bytes; empty in the dense regime).  The window entry is bounded
-        by O(window) and the recurrent entry by O(n_slots) regardless of
-        generated length — the invariant the window-ring tests assert."""
+        """Peak residency per layer group
+        ({"global"/"window"/"recurrent"/"cross"} -> bytes; empty in the
+        dense regime).  The window entry is bounded by O(window), the
+        recurrent entry by O(n_slots), and the cross entry by
+        O(n_slots x frontend_tokens) — flat per lane for a request's whole
+        lifetime — regardless of generated length; these are the
+        invariants the window-ring and static-cross tests assert."""
         return dict(self._peak_group_bytes)
 
     def max_concurrency(self) -> int:

@@ -23,6 +23,17 @@ built by the engine from ``models.lm.serve_groups``):
 * **recurrent** — ssd/rglru scan state: O(1) per-slot state slabs, no
   blocks at all; the allocator accounts these slots (and their bytes)
   separately from paged blocks.
+* **cross** — enc-dec cross-attention K/V: a per-slot *static block set*
+  sized for exactly ``frontend_tokens`` rows, allocated in full at
+  admission (priced by ``can_allocate`` alongside the decoder groups, so
+  admission can never deadlock on it), written once by the
+  encode-at-admission step, never extended, and freed at retirement.
+  Cross residency is therefore flat for the lifetime of a request.
+
+A modality frontend (VLM) needs no group of its own: its projected rows
+prepend the decoder sequence, so the layout's ``frontend_extra`` simply
+widens the global/window price of every admission by ``frontend_tokens``
+physical rows.
 
 Two layers:
 
@@ -74,7 +85,11 @@ class CacheLayout:
     window ring: the most blocks a lane can pin simultaneously
     (``blocks_for(window) + 1``, plus the in-flight chunk during chunked
     prefill).  ``state_slots``/``state_bytes_per_slot`` describe the
-    recurrent lanes, accounted separately from paged blocks."""
+    recurrent lanes, accounted separately from paged blocks.
+    ``cross_tokens``/``cross_cap_blocks`` describe the enc-dec static
+    cross block set (allocated whole at admission, never extended);
+    ``frontend_extra`` widens every admission's global/window price by the
+    VLM frontend rows that share the decoder cache."""
 
     has_global: bool = True
     window: int = 0                  # sliding-window width (0 = no group)
@@ -83,6 +98,11 @@ class CacheLayout:
     state_bytes_per_slot: int = 0
     prefill_chunk: int = 0           # chunked prefill (window rings start
                                      # at block 0 and slide with the chunks)
+    cross_tokens: int = 0            # enc-dec cross-KV rows (0 = no group)
+    cross_cap_blocks: int = 0        # static per-slot cross block set size
+    frontend_extra: int = 0          # VLM frontend rows resident in the
+                                     # decoder cache on top of every
+                                     # admission's logical token count
 
 
 class PagedKVStore:
@@ -168,10 +188,12 @@ class BlockAllocator:
 
     The installed ``CacheLayout`` decides what an admission claims: a
     growing **global** table (``tables``), a sliding **window** block ring
-    (``window_tables``: logical block -> physical block), and/or a
-    **recurrent state slot** — all drawn from (and accounted against) the
-    same pool, so admission control and the cache-pressure telemetry see
-    every group.  The default layout is global-only (the original regime).
+    (``window_tables``: logical block -> physical block), a static
+    **cross** block set (``cross_tables``: enc-dec cross-KV, fixed length
+    for the request's lifetime), and/or a **recurrent state slot** — all
+    drawn from (and accounted against) the same pool, so admission
+    control and the cache-pressure telemetry see every group.  The
+    default layout is global-only (the original regime).
 
     Optionally carries attached ``PagedKVStore``s tagged with their group
     (the engine attaches one per pool leaf); the allocator then reports
@@ -192,8 +214,11 @@ class BlockAllocator:
         self._tokens: dict[int, int] = {}
         # slot -> {logical block index: physical block} window ring
         self.window_tables: dict[int, dict[int, int]] = {}
+        # slot -> static cross-KV block set (fixed length, never extended)
+        self.cross_tables: dict[int, list[int]] = {}
         self._state_slots: set[int] = set()
-        self._group_in_use: dict[str, int] = {"global": 0, "window": 0}
+        self._group_in_use: dict[str, int] = {"global": 0, "window": 0,
+                                              "cross": 0}
         self.stores: list[PagedKVStore] = []
         self.store_groups: list[str] = []
         if store is not None:
@@ -201,7 +226,8 @@ class BlockAllocator:
 
     def set_layout(self, layout: CacheLayout) -> None:
         """Install the engine's cache-group layout (before any admission)."""
-        if self.tables or self.window_tables or self._state_slots:
+        if self.tables or self.window_tables or self.cross_tables or \
+                self._state_slots:
             raise ValueError("cannot change layout with live allocations")
         self.layout = layout
 
@@ -223,15 +249,23 @@ class BlockAllocator:
         return self.n_in_use / self.config.n_blocks if self.config.n_blocks else 0.0
 
     def blocks_needed(self, n_tokens: int) -> int:
-        """Admission price of ``n_tokens`` resident tokens across block
-        groups: global tables grow with the context; a window ring is
-        capped at ``layout.window_cap_blocks`` regardless of length."""
+        """Admission price of ``n_tokens`` logical tokens across block
+        groups: global tables grow with the context (plus the layout's
+        ``frontend_extra`` physical rows a VLM admission brings along); a
+        window ring is capped at ``layout.window_cap_blocks`` regardless
+        of length; an enc-dec cross block set costs its full static size
+        up front — pricing it here is what keeps admission deadlock-free
+        (a request can never be admitted without room for its whole
+        cross KV)."""
+        phys = n_tokens + self.layout.frontend_extra
         need = 0
         if self.layout.has_global:
-            need += self.config.blocks_for(n_tokens)
+            need += self.config.blocks_for(phys)
         if self.layout.window:
-            need += min(self.config.blocks_for(n_tokens),
+            need += min(self.config.blocks_for(phys),
                         self.layout.window_cap_blocks)
+        if self.layout.cross_tokens:
+            need += self.layout.cross_cap_blocks
         return need
 
     def can_allocate(self, n_tokens: int) -> bool:
@@ -253,19 +287,29 @@ class BlockAllocator:
     def allocate(self, slot: int, n_tokens: int) -> list[int]:
         """Claim every group's resources for a newly admitted request
         occupying ``slot``; returns the global block ids (empty when the
-        layout has no global layers)."""
+        layout has no global layers).  ``n_tokens`` is the request's
+        logical count (prompt + first generated token); the per-slot token
+        ledger is kept in *physical* rows, i.e. with ``frontend_extra``
+        folded in, so the engine's later ``extend`` calls (which pass
+        physical resident rows) line up."""
         if slot in self.tables:
             raise ValueError(f"slot {slot} already has an allocation")
         if not self.can_allocate(n_tokens):
             raise MemoryError(
                 f"need {self.blocks_needed(n_tokens)} blocks for {n_tokens} "
                 f"tokens, {self.n_free} free")
-        need = self.config.blocks_for(n_tokens) if self.layout.has_global else 0
+        phys = n_tokens + self.layout.frontend_extra
+        need = self.config.blocks_for(phys) if self.layout.has_global else 0
         self.tables[slot] = self._claim(need, f"slot {slot}")
         self._group_in_use["global"] += need
-        self._tokens[slot] = n_tokens
+        self._tokens[slot] = phys
         if self.layout.window:
-            self._allocate_window(slot, n_tokens)
+            self._allocate_window(slot, phys)
+        if self.layout.cross_tokens:
+            cross = self._claim(self.layout.cross_cap_blocks,
+                                f"slot {slot} cross block set")
+            self.cross_tables[slot] = cross
+            self._group_in_use["cross"] += len(cross)
         if self.layout.state_slots:
             self._state_slots.add(slot)
         return list(self.tables[slot])
@@ -353,6 +397,11 @@ class BlockAllocator:
             self._free.extend(ring_blocks)
             self._group_in_use["window"] -= len(ring_blocks)
             blocks = blocks + ring_blocks
+        cross = self.cross_tables.pop(slot, None)
+        if cross:
+            self._free.extend(reversed(cross))
+            self._group_in_use["cross"] -= len(cross)
+            blocks = blocks + cross
         self._state_slots.discard(slot)
         return len(blocks)
 
@@ -363,6 +412,9 @@ class BlockAllocator:
         if self.window_tables:
             raise AssertionError(
                 f"live window rings remain: {sorted(self.window_tables)}")
+        if self.cross_tables:
+            raise AssertionError(
+                f"live cross block sets remain: {sorted(self.cross_tables)}")
         if self._state_slots:
             raise AssertionError(
                 f"live state slots remain: {sorted(self._state_slots)}")
@@ -400,6 +452,16 @@ class BlockAllocator:
         null = self.config.null_block
         return [ring.get(i, null) for i in range(width)]
 
+    def padded_cross_table(self, slot: int, width: int) -> list[int]:
+        """``slot``'s static cross block set padded to ``width`` entries
+        with the null block id.  The set never grows, so this row is
+        published exactly once per admission."""
+        table = self.cross_tables[slot]
+        if len(table) > width:
+            raise ValueError(
+                f"cross table of {len(table)} blocks exceeds width {width}")
+        return table + [self.config.null_block] * (width - len(table))
+
     def write_token(self, slot: int, pos: int, k, v) -> None:
         """Write one token's K/V into ``slot``'s lane via the first store."""
         self.stores[0].write_token(self.tables[slot], pos, k, v)
@@ -421,7 +483,7 @@ class BlockAllocator:
         own stores' per-block bytes; the recurrent group is state slots
         times the layout's per-slot state bytes."""
         out: dict[str, int] = {}
-        for group in ("global", "window"):
+        for group in ("global", "window", "cross"):
             bb = sum(s.block_bytes for s, g in zip(self.stores,
                                                    self.store_groups)
                      if g == group)

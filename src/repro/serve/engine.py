@@ -15,22 +15,29 @@ per-step telemetry (slot occupancy, cache pressure, latency) feeds the paper
 * dense (default) — a vmapped single-request lane over a slot-stacked cache
   tree; every lane carries its own absolute position, so emitted tokens are
   bit-identical to per-request greedy decoding.
-* paged (``paged=True``) — the physical regime, for **every decoder-only
-  arch**: the per-layer capability report (``lm.serve_groups``) partitions
-  the layers into mixed cache groups — global attention and MLA latents
-  live in shared ``[n_pages, block_size, ...]`` page pools behind growing
-  per-slot block tables; sliding-window layers use the same pools behind
-  per-slot *window block rings* (blocks fully behind ``pos - window`` are
-  freed back to the allocator and the published table entry becomes null);
-  ssd/rglru layers hold O(1) per-slot recurrent state slabs (no blocks),
-  with the allocator accounting those state slots separately.  Decode is
-  one batched step that writes each lane's token through its group tables
-  and attends via the gather-based paged kernel (window-masked for ring
-  layers).  For all-global archs the gathered view has exactly ``kv_len``
-  rows (``kv_len % block_size == 0`` is enforced) and masked rows
-  contribute exact zeros, so tokens are bit-identical to the oracle;
-  window/recurrent archs agree with the oracle to greedy-argmax identity
-  (the reduction orders differ in ulps — see docs/serving.md).
+* paged (``paged=True``) — the physical regime, for **every arch in the
+  registry**: the per-layer capability report (``lm.serve_groups``)
+  partitions the layers into mixed cache groups — global attention and MLA
+  latents live in shared ``[n_pages, block_size, ...]`` page pools behind
+  growing per-slot block tables; sliding-window layers use the same pools
+  behind per-slot *window block rings* (blocks fully behind
+  ``pos - window`` are freed back to the allocator and the published table
+  entry becomes null); ssd/rglru layers hold O(1) per-slot recurrent state
+  slabs (no blocks), with the allocator accounting those state slots
+  separately; enc-dec decoder layers additionally cross-attend through a
+  per-slot *static cross block set* — sized for exactly
+  ``frontend_tokens`` rows, priced and allocated in full at admission,
+  written once by the encode-at-admission step, never extended, freed at
+  retirement.  A modality frontend (VLM) needs no group of its own: its
+  projected rows prepend the decoder sequence and page through the normal
+  self-attention tables.  Decode is one batched step that writes each
+  lane's token through its group tables and attends via the gather-based
+  paged kernel (window-masked for ring layers).  For all-global archs the
+  gathered view has exactly ``kv_len`` (+ frontend) rows
+  (``% block_size == 0`` is enforced) and masked rows contribute exact
+  zeros, so tokens are bit-identical to the oracle; window/recurrent
+  archs agree with the oracle to greedy-argmax identity (the reduction
+  orders differ in ulps — see docs/serving.md).
 
 On top of either regime, ``bucket_prompts=True`` pads prefills to
 power-of-two buckets (compile count bounded by the bucket count instead of
@@ -38,7 +45,8 @@ the number of distinct prompt lengths; recurrent state is frozen past the
 true length via ``valid_len``), and ``prefill_chunk=N`` (paged only)
 splits long prompts into N-token chunks interleaved with decode steps so
 admission never stalls running lanes — recurrent layers carry their scan
-state across the chunks.
+state across the chunks, and a frontend arch's rows ride the chunk stream
+as precomputed embeddings.
 """
 
 from __future__ import annotations
@@ -103,7 +111,8 @@ def make_serve_step(cfg: ModelConfig, impl: str = "chunked",
 
 
 def make_bucketed_prefill_step(cfg: ModelConfig, impl: str = "chunked"):
-    """prefill(params, cache, tokens [B, Sb], true_len) -> (next_tok, cache).
+    """prefill(params, cache, tokens [B, Sb], true_len, frontend_emb) ->
+    (next_tok, cache).
 
     The prompt is right-padded to a bucket length Sb; causality makes the
     logits at ``true_len - 1`` exact, the padded rows' cache entries are
@@ -111,16 +120,24 @@ def make_bucketed_prefill_step(cfg: ModelConfig, impl: str = "chunked"):
     ``valid_len=true_len`` freezes recurrent (ssd/rglru) state at the real
     prompt length (and keeps pad rows out of window ring slots).  One
     compile per bucket instead of one per distinct prompt length.
+
+    A modality frontend prepends F projected rows to the decoder sequence,
+    so every boundary — the logits read, the valid length, the position
+    invalidation — shifts by F (the frontend rows themselves are real
+    content, never padding).
     """
-    def prefill_step(params, cache, tokens, true_len):
+    F = cfg.frontend_tokens if (cfg.frontend and not cfg.n_enc_layers) else 0
+
+    def prefill_step(params, cache, tokens, true_len, frontend_emb=None):
         logits, new_cache, _ = lm.forward(
-            cfg, params, tokens, cache=cache, mode="prefill", impl=impl,
-            moe_lossless=True, valid_len=true_len)
-        last = lax.dynamic_index_in_dim(logits, true_len - 1, axis=1,
+            cfg, params, tokens, frontend_emb=frontend_emb, cache=cache,
+            mode="prefill", impl=impl, moe_lossless=True,
+            valid_len=true_len + F)
+        last = lax.dynamic_index_in_dim(logits, F + true_len - 1, axis=1,
                                         keepdims=False)
         next_tok = jnp.argmax(last[:, :cfg.vocab_size],
                               axis=-1).astype(jnp.int32)
-        return next_tok, lm.mask_cache_positions(new_cache, true_len)
+        return next_tok, lm.mask_cache_positions(new_cache, true_len + F)
     return prefill_step
 
 
@@ -135,7 +152,8 @@ def make_paged_decode_step(cfg: ModelConfig, impl: str = "chunked"):
         logits, new_cache, _ = lm.forward(
             cfg, params, toks[:, None], positions=pos, cache=caches,
             mode="decode", impl=impl, paged_tables=tables.get("global"),
-            window_tables=tables.get("window"))
+            window_tables=tables.get("window"),
+            cross_tables=tables.get("cross"))
         new_cache = lm.freeze_state_lanes(cfg, new_cache, caches, active)
         next_tok = jnp.argmax(logits[:, -1, :cfg.vocab_size],
                               axis=-1).astype(jnp.int32)
@@ -144,31 +162,42 @@ def make_paged_decode_step(cfg: ModelConfig, impl: str = "chunked"):
 
 
 def make_chunk_prefill_step(cfg: ModelConfig, chunk: int,
-                            impl: str = "chunked"):
-    """chunk(params, caches, tokens [1, C], start, rows {group: [W]},
-    last_idx, slot, valid) -> (candidate_tok [1], caches).
+                            impl: str = "chunked", embeds: bool = False):
+    """chunk(params, caches, piece, start, rows {group: [W]}, last_idx,
+    slot, valid) -> (candidate_tok [1], caches).
 
     Processes one C-token slice of a prompt directly against the paged
     tree: writes the slice's rows through the lane's group tables (global
     blocks, window ring), threads the lane's recurrent state slab through
     the slice (``lane_view``/``lane_merge`` — the chunk-carried prefill
-    state), attends causally over everything resident so far, and returns
-    the greedy token read at ``last_idx`` (only meaningful on the final
-    slice).  ``valid`` counts the slice's real rows: pad rows of a final
-    chunk freeze the recurrent state and are redirected to the null page.
-    Fixed C means exactly one compile regardless of prompt lengths.
+    state), attends causally over everything resident so far (enc-dec
+    archs additionally cross-attend to the lane's static cross block set,
+    written at admission), and returns the greedy token read at
+    ``last_idx`` (only meaningful on the final slice).  ``valid`` counts
+    the slice's real rows: pad rows of a final chunk freeze the recurrent
+    state and are redirected to the null page.  Fixed C means exactly one
+    compile regardless of prompt lengths.
+
+    ``embeds=True`` (modality-frontend archs): ``piece`` is a [1, C,
+    d_model] slice of the precomputed decoder input rows
+    (``lm.embed_prompt_rows``) instead of [1, C] token ids — a chunk can
+    then straddle the frontend/token boundary.
     """
-    def chunk_step(params, caches, tokens, start, rows, last_idx, slot,
+    def chunk_step(params, caches, piece, start, rows, last_idx, slot,
                    valid):
         positions = start + jnp.arange(chunk, dtype=jnp.int32)
         g_row = rows.get("global")
         w_row = rows.get("window")
+        x_row = rows.get("cross")
         sub = lm.lane_view(cfg, caches, slot)
         logits, new_sub, _ = lm.forward(
-            cfg, params, tokens, positions=positions, cache=sub,
+            cfg, params, tokens=None if embeds else piece,
+            input_embeds=piece if embeds else None,
+            positions=positions, cache=sub,
             mode="prefill", impl=impl,
             paged_tables=None if g_row is None else g_row[None],
             window_tables=None if w_row is None else w_row[None],
+            cross_tables=None if x_row is None else x_row[None],
             moe_lossless=True, valid_len=valid)
         caches = lm.lane_merge(cfg, caches, new_sub, slot)
         last = lax.dynamic_index_in_dim(logits, last_idx, axis=1,
@@ -211,11 +240,13 @@ class Engine:
 
 @dataclass
 class ContinuousEngine:
-    """Continuous-batching greedy-decoding engine (decoder-only archs).
+    """Continuous-batching greedy-decoding engine (every registry arch).
 
-    Requests are ``submit()``-ed with an arrival step, then ``run()`` drives
-    the loop: admit arrived requests into free slots, prefill them (whole,
-    bucketed, or in interleaved chunks), one decode step across all lanes
+    Requests are ``submit()``-ed with an arrival step (VLM / enc-dec
+    requests carry their precomputed frontend embeddings), then ``run()``
+    drives the loop: admit arrived requests into free slots, prefill them
+    (whole, bucketed, or in interleaved chunks; the encoder / frontend
+    projection runs once at admission), one decode step across all lanes
     with per-slot positions, retire slots on EOS/max-tokens and reclaim
     their cache blocks.  A lane's computation is exactly the B=1 decode
     path, so outputs are token-identical to ``Engine.generate`` per request
@@ -227,15 +258,17 @@ class ContinuousEngine:
       from the per-layer capability report (``lm.serve_groups``): shared
       page pools + growing per-slot block tables for global attention and
       MLA latents, window block rings for sliding-window layers, O(1)
-      per-slot state slabs for ssd/rglru layers.  Works for every
-      decoder-only arch; attention groups require
-      ``kv_len % block_size == 0``.
+      per-slot state slabs for ssd/rglru layers, static per-slot cross
+      block sets for enc-dec cross-attention KV (allocated whole at
+      admission, never extended).  Attention groups require
+      ``(kv_len + frontend rows) % block_size == 0``.
     * ``bucket_prompts=True`` — pad prefills to power-of-two buckets; the
       prefill compile count is bounded by the bucket count.
     * ``prefill_chunk=N`` — (paged only) split prompts into N-token chunks,
       one chunk per engine step, interleaved with decode of running lanes;
       exactly one prefill compile regardless of prompt lengths.  Recurrent
-      layers carry their scan state across a lane's chunks.
+      layers carry their scan state across a lane's chunks; a frontend
+      arch's projected rows ride the chunk stream as embedding rows.
     """
 
     cfg: ModelConfig
@@ -262,21 +295,33 @@ class ContinuousEngine:
         self._has_global = bool(groups["paged"])
         self._has_window = bool(groups["window"])
         self._has_state = bool(groups["recurrent"])
+        self._has_cross = bool(groups["cross"])
+        # a VLM frontend's projected rows share the decoder's self-attention
+        # cache: every lane physically holds F extra rows ahead of its
+        # prompt (enc-dec frames live in the separate cross block set
+        # instead, so they add nothing here)
+        self._frontend_extra = (self.cfg.frontend_tokens
+                                if (self.cfg.frontend and
+                                    not self.cfg.n_enc_layers) else 0)
+        self._kv_total = self.kv_len + self._frontend_extra
         has_blocks = self._has_global or self._has_window
-        if self.paged and has_blocks and self.kv_len % self.block_size:
+        if self.paged and has_blocks and self._kv_total % self.block_size:
             raise ValueError(
-                f"paged mode needs kv_len ({self.kv_len}) divisible by "
-                f"block_size ({self.block_size}) so the gathered KV view "
-                "matches the dense oracle shape (token identity)")
-        blocks_per_slot = -(-self.kv_len // self.block_size)
+                f"paged mode needs kv_len + frontend rows ({self._kv_total}) "
+                f"divisible by block_size ({self.block_size}) so the "
+                "gathered KV view matches the dense oracle shape (token "
+                "identity)")
         if self.paged:
             # per-slot block budget by group: global tables grow to the
-            # full context; a window ring is capped at O(window) blocks
-            per_slot = blocks_per_slot if self._has_global else 0
+            # full context; a window ring is capped at O(window) blocks;
+            # an enc-dec cross block set is a fixed blocks_for(F) price
+            per_slot = (self._kv_total // self.block_size
+                        if self._has_global else 0)
             per_slot += self._window_cap_blocks()
+            per_slot += self._cross_cap_blocks()
             n_blocks = self.n_slots * per_slot
         else:
-            n_blocks = self.n_slots * blocks_per_slot
+            n_blocks = self.n_slots * -(-self.kv_len // self.block_size)
         self.allocator = BlockAllocator(CacheConfig(
             block_size=self.block_size, n_blocks=n_blocks))
         self.scheduler = SlotScheduler(self.n_slots, self.allocator,
@@ -291,7 +336,7 @@ class ContinuousEngine:
         # reusable zeroed single-request cache fed to every full prefill
         # (jax arrays are immutable, so sharing the template across
         # admissions is safe and saves an alloc+zero per request)
-        self._fresh = lm.init_cache(self.cfg, 1, self.kv_len, self.dtype)
+        self._fresh = lm.init_cache(self.cfg, 1, self._kv_total, self.dtype)
         self._toks = jnp.zeros((self.n_slots,), jnp.int32)
         self._pos = jnp.zeros((self.n_slots,), jnp.int32)
         self._now = 0
@@ -319,7 +364,7 @@ class ContinuousEngine:
 
             self._insert = jax.jit(admit_update)
             self._caches = lm.init_slot_caches(self.cfg, self.n_slots,
-                                               self.kv_len, self.dtype)
+                                               self._kv_total, self.dtype)
 
     def _window_cap_blocks(self) -> int:
         """Most blocks one lane's window ring can pin simultaneously:
@@ -329,17 +374,25 @@ class ContinuousEngine:
         if not self._has_window:
             return 0
         bf = lambda n: -(-n // self.block_size)
-        wc = min(self.kv_len, self.cfg.window_size)
+        wc = min(self._kv_total, self.cfg.window_size)
         cap = bf(wc) + 1 + (bf(self.prefill_chunk) if self.prefill_chunk
                             else 0)
-        return min(bf(self.kv_len), cap)
+        return min(bf(self._kv_total), cap)
+
+    def _cross_cap_blocks(self) -> int:
+        """Static per-slot cross block set size: blocks covering the
+        encoder's ``frontend_tokens`` rows (0 for non-enc-dec archs)."""
+        if not self._has_cross:
+            return 0
+        return -(-self.cfg.frontend_tokens // self.block_size)
 
     def _init_paged(self) -> None:
         """Physical regime: page pools, per-group block tables, recurrent
-        state slabs, store bindings."""
+        state slabs, static cross block sets, store bindings."""
         cache_cfg = self.allocator.config
         null = cache_cfg.null_block
-        self._max_blocks = self.kv_len // self.block_size
+        self._max_blocks = self._kv_total // self.block_size
+        self._cross_width = self._cross_cap_blocks()
         self._caches = lm.init_paged_caches(
             self.cfg, self.n_slots, cache_cfg.n_blocks + 1, self.block_size,
             self.dtype)
@@ -352,16 +405,23 @@ class ContinuousEngine:
                 cache_cfg, leaf[keys[0]], leaf[keys[1]]), group=group)
         self.allocator.set_layout(CacheLayout(
             has_global=self._has_global,
-            window=min(self.kv_len, self.cfg.window_size)
+            window=min(self._kv_total, self.cfg.window_size)
             if self._has_window else 0,
             window_cap_blocks=self._window_cap_blocks(),
             state_slots=self.n_slots if self._has_state else 0,
             state_bytes_per_slot=lm.state_bytes_per_slot(self.cfg,
                                                          self._caches)
             if self._has_state else 0,
-            prefill_chunk=self.prefill_chunk))
+            prefill_chunk=self.prefill_chunk,
+            cross_tokens=self.cfg.frontend_tokens if self._has_cross else 0,
+            cross_cap_blocks=self._cross_width,
+            frontend_extra=self._frontend_extra))
         self._null_row = jnp.full((self._max_blocks,), null, jnp.int32)
-        # one published [n_slots, max_blocks] table per block group
+        self._null_rows = {"global": self._null_row,
+                           "window": self._null_row,
+                           "cross": jnp.full((self._cross_width,), null,
+                                             jnp.int32)}
+        # one published [n_slots, width] table per block group
         self._tables: dict[str, jax.Array] = {}
         if self._has_global:
             self._tables["global"] = jnp.tile(self._null_row[None],
@@ -369,13 +429,17 @@ class ContinuousEngine:
         if self._has_window:
             self._tables["window"] = jnp.tile(self._null_row[None],
                                               (self.n_slots, 1))
+        if self._has_cross:
+            self._tables["cross"] = jnp.tile(self._null_rows["cross"][None],
+                                             (self.n_slots, 1))
         self._rows: dict[int, dict[str, jax.Array]] = {}
         self._host_pos: dict[int, int] = {}
 
         self._decode_p = jax.jit(make_paged_decode_step(self.cfg, self.impl))
         if self.prefill_chunk:
             self._chunk = jax.jit(make_chunk_prefill_step(
-                self.cfg, self.prefill_chunk, self.impl))
+                self.cfg, self.prefill_chunk, self.impl,
+                embeds=bool(self._frontend_extra)))
 
         def paged_insert(caches, single, rows, slot):
             return lm.insert_paged_prompt(
@@ -386,6 +450,22 @@ class ContinuousEngine:
             return lm.write_state_lanes(self.cfg, caches, single, slot)
 
         self._reset_state = jax.jit(reset_state)
+
+        if self._has_cross:
+            # encode-at-admission for the chunked path: the encoder runs
+            # once per request and its projected cross K/V is scattered
+            # into the slot's static cross block set (the full-prefill
+            # path computes both inside the dense prefill instead)
+            def encode_cross(params, fe):
+                return lm.encode_cross_single(self.cfg, params, fe)
+
+            def insert_cross(caches, cross_single, row):
+                return lm.insert_cross_rows(
+                    self.cfg, caches, cross_single, row,
+                    block_size=self.block_size, null_block=null)
+
+            self._encode_cross = jax.jit(encode_cross)
+            self._insert_cross = jax.jit(insert_cross)
 
         def lane_set(toks, pos, tables, slot, tok, start_pos, rows):
             tables = {g: tables[g].at[slot].set(rows[g]) for g in tables}
@@ -409,11 +489,31 @@ class ContinuousEngine:
 
     # -- intake -----------------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int, *, rid=None,
-               arrival: int = 0, eos_id: Optional[int] = None) -> object:
+               arrival: int = 0, eos_id: Optional[int] = None,
+               frontend_emb=None) -> object:
         """Queue a request; returns its id. ``prompt`` is a 1-D token id
         sequence; ``arrival`` is the engine step at which it becomes
-        admissible (0 = immediately)."""
+        admissible (0 = immediately).  VLM / enc-dec configs require
+        ``frontend_emb`` — the request's precomputed stub embeddings of
+        shape [frontend_tokens, frontend_dim] (encoded / projected once at
+        admission)."""
         prompt = [int(t) for t in prompt]
+        needs_fe = bool(self.cfg.frontend or self.cfg.n_enc_layers)
+        if needs_fe:
+            if frontend_emb is None:
+                raise ValueError(
+                    f"{self.cfg.name}: requests must carry frontend_emb "
+                    f"[{self.cfg.frontend_tokens}, {self.cfg.frontend_dim}] "
+                    "(precomputed modality-frontend embeddings)")
+            frontend_emb = jnp.asarray(frontend_emb)
+            want = (self.cfg.frontend_tokens, self.cfg.frontend_dim)
+            if frontend_emb.shape != want:
+                raise ValueError(
+                    f"{self.cfg.name}: frontend_emb shape "
+                    f"{frontend_emb.shape} != {want}")
+        elif frontend_emb is not None:
+            raise ValueError(f"{self.cfg.name} is a decoder-only token LM; "
+                             "it takes no frontend_emb")
         if rid is None:
             while self._next_rid in self._rids:   # skip explicit ids in use
                 self._next_rid += 1
@@ -423,7 +523,8 @@ class ContinuousEngine:
             raise ValueError(f"duplicate request id {rid!r}")
         self.scheduler.submit(Request(rid=rid, prompt=prompt,
                                       max_new_tokens=max_new_tokens,
-                                      arrival=arrival, eos_id=eos_id))
+                                      arrival=arrival, eos_id=eos_id,
+                                      frontend_emb=frontend_emb))
         self._rids.add(rid)          # only after validation succeeded
         return rid
 
@@ -435,21 +536,27 @@ class ContinuousEngine:
         fns = [self._prefill, self._prefill_b, getattr(self, "_chunk", None)]
         return sum(f._cache_size() for f in fns if f is not None)
 
-    def _full_prefill(self, prompt_len: int, prompt) -> tuple:
+    def _full_prefill(self, prompt_len: int, prompt, frontend_emb) -> tuple:
         """Whole-prompt prefill into the dense scratch cache; returns
-        (first token [1], populated single-request cache)."""
+        (first token [1], populated single-request cache).
+        ``frontend_emb`` is the request's [1, F, frontend_dim] embeddings
+        (None for decoder-only archs)."""
         if self.bucket_prompts:
             sb = bucket_length(prompt_len, self.kv_len)
             padded = jnp.zeros((1, sb), jnp.int32).at[0, :prompt_len].set(prompt)
             return self._prefill_b(self.params, self._fresh, padded,
-                                   jnp.asarray(prompt_len, jnp.int32))
-        return self._prefill(self.params, self._fresh, prompt[None], None)
+                                   jnp.asarray(prompt_len, jnp.int32),
+                                   frontend_emb)
+        return self._prefill(self.params, self._fresh, prompt[None],
+                             frontend_emb)
 
     def _refresh_row(self, slot: int, group: str) -> jax.Array:
         """Rebuild ``slot``'s published table row for ``group`` from the
         allocator's current tables."""
         if group == "global":
             row = self.allocator.padded_table(slot, self._max_blocks)
+        elif group == "cross":
+            row = self.allocator.padded_cross_table(slot, self._cross_width)
         else:
             row = self.allocator.padded_window_table(slot, self._max_blocks)
         arr = jnp.asarray(row, jnp.int32)
@@ -470,12 +577,17 @@ class ContinuousEngine:
         slot = act.slot
         prompt_len = act.request.prompt_len
         prompt = jnp.asarray(act.request.prompt, jnp.int32)
+        fe = act.request.frontend_emb
+        fe1 = None if fe is None else fe[None]
+        # the decode lane starts past everything resident: the prompt,
+        # plus a VLM frontend's projected rows ahead of it
+        start_pos = self._frontend_extra + prompt_len
         if not self.paged:
-            tok, cache = self._full_prefill(prompt_len, prompt)
+            tok, cache = self._full_prefill(prompt_len, prompt, fe1)
             self._caches, self._toks, self._pos = self._insert(
                 self._caches, cache, self._toks, self._pos,
                 jnp.asarray(slot, jnp.int32), tok[0],
-                jnp.asarray(prompt_len, jnp.int32))
+                jnp.asarray(start_pos, jnp.int32))
             act.tokens.append(int(tok[0]))
             return
         self._rows[slot] = {}
@@ -489,43 +601,59 @@ class ContinuousEngine:
             if self._has_state:
                 self._caches = self._reset_state(
                     self._caches, self._fresh, jnp.asarray(slot, jnp.int32))
-            self._prefilling[slot] = [prompt, 0]
+            if self._has_cross:
+                # encode-at-admission: the cross block set is written once
+                # here and is read-only for the request's lifetime
+                cross_single = self._encode_cross(self.params, fe1)
+                self._caches = self._insert_cross(
+                    self._caches, cross_single, self._rows[slot]["cross"])
+            if self._frontend_extra:
+                # frontend rows ride the chunk stream as precomputed
+                # embedding rows (a chunk may straddle the boundary)
+                item = lm.embed_prompt_rows(self.cfg, self.params, prompt,
+                                            fe)
+            else:
+                item = prompt
+            self._prefilling[slot] = [item, 0]
             return
-        tok, cache = self._full_prefill(prompt_len, prompt)
+        tok, cache = self._full_prefill(prompt_len, prompt, fe1)
         self._caches = self._insert_p(self._caches, cache, self._rows[slot],
                                       jnp.asarray(slot, jnp.int32))
-        self._activate_lane(slot, tok[0], prompt_len)
+        self._activate_lane(slot, tok[0], start_pos)
         act.tokens.append(int(tok[0]))
 
     def _run_chunk(self, slot: int) -> bool:
         """Advance ``slot``'s chunked prefill by one chunk; returns True
-        (and activates the decode lane) when the prompt is fully resident."""
-        prompt, done = self._prefilling[slot]
+        (and activates the decode lane) when the prompt is fully resident.
+        The chunk stream is token ids, or precomputed embedding rows for a
+        modality-frontend arch (``total`` then counts frontend rows too)."""
+        item, done = self._prefilling[slot]
         C = self.prefill_chunk
         start = done * C
-        prompt_len = prompt.shape[0]
-        piece = prompt[start:start + C]
+        total = item.shape[0]
+        piece = item[start:start + C]
         valid = piece.shape[0]                 # real rows in this slice
         if valid < C:                          # pad final chunk to C
-            piece = jnp.zeros((C,), jnp.int32).at[:valid].set(piece)
+            piece = jnp.zeros((C,) + item.shape[1:],
+                              item.dtype).at[:valid].set(piece)
         if self._has_window:
             # slide the ring to cover this slice; rows behind the slice's
             # FIRST query keep their window (freed only once fully behind)
             fresh, freed = self.allocator.extend_window(
-                slot, min(start + C, prompt_len), first_query_pos=start)
+                slot, min(start + C, total), first_query_pos=start)
             if fresh or freed:
                 self._refresh_row(slot, "window")
-        last = prompt_len - 1 - start          # only valid on the final chunk
+        last = total - 1 - start               # only valid on the final chunk
         tok, self._caches = self._chunk(
             self.params, self._caches, piece[None],
             jnp.asarray(start, jnp.int32), self._rows[slot],
             jnp.asarray(min(max(last, 0), C - 1), jnp.int32),
             jnp.asarray(slot, jnp.int32), jnp.asarray(valid, jnp.int32))
         self._prefilling[slot][1] = done + 1
-        if start + C < prompt_len:
+        if start + C < total:
             return False
         del self._prefilling[slot]
-        self._activate_lane(slot, tok[0], prompt_len)
+        self._activate_lane(slot, tok[0], total)
         self.scheduler.active[slot].tokens.append(int(tok[0]))
         return True
 
@@ -536,7 +664,7 @@ class ContinuousEngine:
         if self.paged:
             for group in self._tables:
                 self._tables[group] = self._tables[group].at[slot].set(
-                    self._null_row)
+                    self._null_rows[group])
             self._rows.pop(slot, None)
             self._host_pos.pop(slot, None)
         return act.tokens

@@ -6,10 +6,11 @@ are decoding joins the running batch at its next step instead of waiting for
 a batch boundary.  Admission is strict FCFS (no head-of-line skipping, so
 completion order is predictable) and is gated on the block allocator, which
 prices the request across every cache group its ``CacheLayout`` declares:
-global block tables grow with the prompt, a window ring is priced at its
-O(window) block cap, and recurrent layers need a free state slot.  A request
-is only admitted when its worst case (prompt + max_new_tokens) fits in
-``kv_len`` and that price is free right now.
+global block tables grow with the prompt (plus any VLM frontend rows), a
+window ring is priced at its O(window) block cap, an enc-dec cross block set
+at its full static size, and recurrent layers need a free state slot.  A
+request is only admitted when its worst case (prompt + max_new_tokens) fits
+in ``kv_len`` and that price is free right now.
 
 Arrivals are measured in engine steps (one step = one batched decode), which
 keeps tests and benchmarks deterministic; the launcher maps wall-clock
@@ -27,13 +28,19 @@ from .cache import BlockAllocator
 
 @dataclass
 class Request:
-    """One serving request: prompt token ids + a decode budget."""
+    """One serving request: prompt token ids + a decode budget.
+
+    ``frontend_emb`` carries the request's precomputed modality-frontend
+    embeddings ([frontend_tokens, frontend_dim]) for VLM / enc-dec archs —
+    the encoder (or frontend projection) runs once at admission, so the
+    trace itself stays host-side data."""
 
     rid: object
     prompt: object                   # int sequence / [S] array of token ids
     max_new_tokens: int
     arrival: int = 0                 # engine step at which the request exists
     eos_id: Optional[int] = None     # stop early when this token is emitted
+    frontend_emb: Optional[object] = None
 
     @property
     def prompt_len(self) -> int:

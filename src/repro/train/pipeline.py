@@ -17,15 +17,12 @@ in DESIGN.md §2.
 
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.models import blocks, lm
+from repro.models import blocks
 from repro.models.config import LayerSpec, ModelConfig
 from repro.optim import adamw, AdamWConfig
 

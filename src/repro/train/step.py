@@ -10,7 +10,7 @@ error-feedback compressed cross-pod gradient reduction can be enabled
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -17,6 +17,22 @@ def test_markdown_links_resolve():
     assert out.returncode == 0, out.stderr + out.stdout
 
 
+def test_link_checker_scans_all_files_in_one_pass(tmp_path):
+    """CHANGES.md and ISSUE.md are scanned along with README/docs, and
+    *every* broken link is reported in a single run (no stop-at-first)."""
+    (tmp_path / "README.md").write_text("[a](missing-a.md)")
+    (tmp_path / "CHANGES.md").write_text("[b](missing-b.md)")
+    (tmp_path / "ISSUE.md").write_text("[c](missing-c.md) [ok](README.md)")
+    out = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "check_markdown_links.py"),
+         str(tmp_path)],
+        capture_output=True, text=True)
+    assert out.returncode == 1
+    assert "checked 3 markdown files, 3 broken links" in out.stdout
+    for frag in ("missing-a.md", "missing-b.md", "missing-c.md"):
+        assert frag in out.stderr, (frag, out.stderr)
+
+
 def test_readme_and_docs_exist():
     for name in ("README.md", "docs/serving.md", "docs/kernels.md",
                  "ROADMAP.md", "PAPER.md", "CHANGES.md"):

@@ -3,7 +3,7 @@
 import pytest
 
 from repro.configs import ARCH_IDS, get
-from repro.core import build_graph, plan_model, cut_bytes
+from repro.core import build_graph, plan_model
 from repro.models.config import SHAPES
 
 

@@ -9,7 +9,7 @@ pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 
 from hypothesis import given, settings, strategies as st
 
-from repro.core import (CostModel, balance_stats, block_partition, cut_bytes,
+from repro.core import (CostModel, block_partition, cut_bytes,
                         homogeneous_devices, partition, random_partition)
 from repro.core.partitioner import Refiner
 

@@ -1,18 +1,23 @@
 """Cross-arch decode-identity matrix — the acceptance bar for
 architecture-general paged serving.
 
-Every decoder-only arch in ``repro.configs`` (reduced dims) is driven
-through the continuous-batching engine in four regimes — dense, paged,
+Every arch in ``repro.configs`` (reduced dims) is driven through the
+continuous-batching engine in six regimes — dense, dense+bucketed, paged,
 paged+bucketed prompts, paged+chunked prefill (and the combination) — and
 must emit, per request, exactly the tokens the static ``Engine`` oracle
 produces for that request alone.  The paged regime builds mixed layer
 groups from the per-layer capability report (``lm.serve_groups``): global
 attention and MLA latents page through growing block tables, sliding-window
-layers through window block rings, and ssd/rglru layers carry O(1)
-recurrent state per slot (chunk-carried across prefill chunks).
+layers through window block rings, ssd/rglru layers carry O(1) recurrent
+state per slot (chunk-carried across prefill chunks), and enc-dec decoder
+layers cross-attend through a *static cross block set* written once at
+admission (encode-at-admission) and never extended.
 
-Enc-dec / frontend archs are the only unsupported configs; they must fail
-with one precise capability error (asserted below).
+Frontend archs ride the same matrix: requests carry their precomputed
+frontend embeddings, a VLM's projected rows page through the normal
+self-attention tables (its ``kv_len`` is chosen so kv_len + frontend rows
+divides the block size), and an enc-dec's frames live in the cross group —
+whose residency must stay flat across decode steps (asserted below).
 
 The two plain-global archs that duplicate tinyllama's structure at larger
 dims are ``slow``-marked; CI's ``-m "not slow"`` selection runs the
@@ -48,34 +53,47 @@ MODES = {
 FAST_ARCHS = ("tinyllama-1.1b", "gemma2-9b", "mixtral-8x7b",
               "recurrentgemma-2b", "mamba2-370m", "deepseek-v2-lite-16b")
 SLOW_ARCHS = ("command-r-35b", "minicpm-2b")   # plain-global duplicates
-UNSUPPORTED = ("phi-3-vision-4.2b", "seamless-m4t-medium")
+# enc-dec / modality-frontend archs: per-arch kv_len so that the paged
+# regime's kv_len + frontend-rows total stays block-aligned (phi-3's 8
+# reduced frontend rows share the decoder cache: 56 + 8 = 64)
+FRONTEND_ARCHS = {"seamless-m4t-medium": KV_LEN, "phi-3-vision-4.2b": 56}
 
-# (arch, setup) cache: the oracle decode is identical across the four
+# (arch, setup) cache: the oracle decode is identical across the six
 # engine modes, so compute it once per arch
 _SETUP: dict = {}
 
 
 def _setup(arch):
     if arch not in _SETUP:
+        kv_len = FRONTEND_ARCHS.get(arch, KV_LEN)
         cfg = get(arch).reduced()
         key = jax.random.PRNGKey(0)
         params = lm.init_params(cfg, key, jnp.float32)
         prompts = [jax.random.randint(jax.random.fold_in(key, i), (n,), 0,
                                       cfg.vocab_size)
                    for i, n in enumerate(PROMPT_LENS)]
-        ref = Engine(cfg, params, kv_len=KV_LEN)
-        expects = [ref.generate(p[None], max_new_tokens=b)[0].tolist()
-                   for p, b in zip(prompts, BUDGETS)]
-        _SETUP[arch] = (cfg, params, prompts, expects)
+        fes = None
+        if cfg.frontend or cfg.n_enc_layers:
+            fes = [jax.random.normal(
+                jax.random.fold_in(key, 100 + i),
+                (cfg.frontend_tokens, cfg.frontend_dim), jnp.float32)
+                for i in range(len(prompts))]
+        ref = Engine(cfg, params, kv_len=kv_len)
+        expects = [ref.generate(
+            p[None], max_new_tokens=b,
+            frontend_emb=None if fes is None else fes[i][None])[0].tolist()
+            for i, (p, b) in enumerate(zip(prompts, BUDGETS))]
+        _SETUP[arch] = (cfg, params, prompts, fes, expects, kv_len)
     return _SETUP[arch]
 
 
 def _run_identity(arch, mode):
-    cfg, params, prompts, expects = _setup(arch)
-    eng = ContinuousEngine(cfg, params, kv_len=KV_LEN, n_slots=2,
+    cfg, params, prompts, fes, expects, kv_len = _setup(arch)
+    eng = ContinuousEngine(cfg, params, kv_len=kv_len, n_slots=2,
                            **MODES[mode])
     for i, p in enumerate(prompts):
-        eng.submit(p, max_new_tokens=BUDGETS[i], rid=i, arrival=i)
+        eng.submit(p, max_new_tokens=BUDGETS[i], rid=i, arrival=i,
+                   frontend_emb=None if fes is None else fes[i])
     results = eng.run()
     for i in range(len(prompts)):
         assert results[i] == expects[i], (arch, mode, i)
@@ -97,11 +115,42 @@ def _run_identity(arch, mode):
             assert peaks.get("window", 0) > 0, (arch, mode, peaks)
         if groups["recurrent"]:
             assert peaks.get("recurrent", 0) > 0, (arch, mode, peaks)
+        if groups["cross"]:
+            assert peaks.get("cross", 0) > 0, (arch, mode, peaks)
+            _assert_cross_residency_flat(eng)
+
+
+def _assert_cross_residency_flat(eng):
+    """Cross-KV is a static block set: every step's cross residency must
+    be an exact multiple of the fixed per-lane footprint (cap blocks x
+    cross pool bytes), bounded by the slot count — a growing cross
+    allocation would break the multiple or the bound."""
+    cap = eng.allocator.layout.cross_cap_blocks
+    per_block = sum(s.block_bytes
+                    for s, g in zip(eng.allocator.stores,
+                                    eng.allocator.store_groups)
+                    if g == "cross")
+    per_lane = cap * per_block
+    assert per_lane > 0
+    seen = {s.resident_by_group.get("cross", 0) for s in eng.telemetry.steps}
+    assert max(seen) > 0
+    for nbytes in seen:
+        assert nbytes % per_lane == 0, (nbytes, per_lane)
+        assert nbytes <= eng.n_slots * per_lane, (nbytes, per_lane)
 
 
 @pytest.mark.parametrize("mode", sorted(MODES))
 @pytest.mark.parametrize("arch", FAST_ARCHS)
 def test_decode_identity(arch, mode):
+    _run_identity(arch, mode)
+
+
+@pytest.mark.parametrize("mode", sorted(MODES))
+@pytest.mark.parametrize("arch", sorted(FRONTEND_ARCHS))
+def test_decode_identity_frontend(arch, mode):
+    """Enc-dec and VLM rows of the matrix: requests carry frontend
+    embeddings; tokens must match the static Engine oracle exactly and
+    (paged) cross-KV residency must stay flat across decode steps."""
     _run_identity(arch, mode)
 
 
@@ -113,35 +162,58 @@ def test_decode_identity_slow(arch, mode):
 
 
 def test_arch_partition_covers_registry():
-    """Every registered arch is either in the matrix or explicitly
-    unsupported — a new config cannot silently skip the identity bar."""
-    covered = set(FAST_ARCHS) | set(SLOW_ARCHS) | set(UNSUPPORTED)
+    """Every registered arch is in the matrix — a new config cannot
+    silently skip the identity bar (there is no unsupported bucket left:
+    the engine is architecture-complete over the registry)."""
+    covered = set(FAST_ARCHS) | set(SLOW_ARCHS) | set(FRONTEND_ARCHS)
     assert covered == set(ARCH_IDS), set(ARCH_IDS) ^ covered
 
 
-@pytest.mark.parametrize("arch,fragment", [
-    ("phi-3-vision-4.2b", "modality frontend"),
-    ("seamless-m4t-medium", "encoder-decoder stack"),
-])
-def test_unsupported_archs_raise_precise_capability_error(arch, fragment):
-    cfg = get(arch).reduced()
-    with pytest.raises(NotImplementedError) as ei:
-        ContinuousEngine(cfg, params={}, kv_len=32, paged=True)
-    msg = str(ei.value)
-    assert msg.startswith(cfg.name), msg
-    assert "decoder-only token LMs" in msg, msg
-    assert fragment in msg, msg
-    assert "use the static Engine" in msg, msg
+def test_no_arch_is_unsupported():
+    """The old capability gap is closed: ``serve_unsupported_reason`` is
+    None for every registered config, full-size and reduced."""
+    for arch in ARCH_IDS:
+        assert lm.serve_unsupported_reason(get(arch)) is None, arch
+        assert lm.serve_unsupported_reason(get(arch).reduced()) is None, arch
+
+
+def test_frontend_emb_submission_contract():
+    """Frontend/enc-dec requests must carry embeddings of the right shape;
+    decoder-only requests must not carry any."""
+    cfg = get("phi-3-vision-4.2b").reduced()
+    key = jax.random.PRNGKey(0)
+    params = lm.init_params(cfg, key, jnp.float32)
+    eng = ContinuousEngine(cfg, params, kv_len=56, paged=True)
+    with pytest.raises(ValueError, match="frontend_emb"):
+        eng.submit([1, 2, 3], max_new_tokens=2)
+    with pytest.raises(ValueError, match="shape"):
+        eng.submit([1, 2, 3], max_new_tokens=2,
+                   frontend_emb=jnp.zeros((3, 3), jnp.float32))
+
+    dec = get("tinyllama-1.1b").reduced()
+    dec_eng = ContinuousEngine(dec, lm.init_params(dec, key, jnp.float32),
+                               kv_len=32)
+    with pytest.raises(ValueError, match="decoder-only"):
+        dec_eng.submit([1, 2, 3], max_new_tokens=2,
+                       frontend_emb=jnp.zeros(
+                           (cfg.frontend_tokens, cfg.frontend_dim)))
 
 
 def test_serve_groups_report_matches_layer_specs():
-    """The per-layer capability report partitions exactly the layer list."""
+    """The mixer keys of the capability report partition exactly the layer
+    list; the cross key is an overlay naming every decoder layer of an
+    enc-dec stack."""
     for arch in ARCH_IDS:
         cfg = get(arch).reduced()
         groups = lm.serve_groups(cfg)
-        seen = sorted(i for idxs in groups.values() for i in idxs)
+        seen = sorted(i for key in ("paged", "window", "recurrent")
+                      for i in groups[key])
         assert seen == list(range(cfg.n_layers)), arch
         for li, spec in enumerate(cfg.layers()):
             group = {"global": "paged", "mla": "paged", "local": "window",
                      "ssd": "recurrent", "rglru": "recurrent"}[spec.mixer]
             assert li in groups[group], (arch, li, spec)
+        if cfg.n_enc_layers:
+            assert groups["cross"] == tuple(range(cfg.n_layers)), arch
+        else:
+            assert groups["cross"] == (), arch

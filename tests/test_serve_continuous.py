@@ -266,7 +266,12 @@ def test_prefill_only_request_is_counted_in_telemetry():
     eng.allocator.check_no_leaks()
 
 
-def test_engine_rejects_frontend_archs():
+def test_engine_accepts_frontend_archs():
+    """The old capability gap is closed: frontend / enc-dec configs
+    construct (decode identity is asserted in test_serve_arch_matrix)."""
     cfg = get("phi-3-vision-4.2b").reduced()
-    with pytest.raises(NotImplementedError):
-        ContinuousEngine(cfg, params={}, kv_len=16)
+    eng = ContinuousEngine(cfg, params={}, kv_len=16)
+    assert eng._frontend_extra == cfg.frontend_tokens
+    enc = get("seamless-m4t-medium").reduced()
+    eng = ContinuousEngine(enc, params={}, kv_len=16, paged=True)
+    assert eng._has_cross and eng._cross_width >= 1

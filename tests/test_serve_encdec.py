@@ -1,0 +1,191 @@
+"""Encoder-decoder / modality-frontend continuous serving invariants.
+
+The decode-identity bar lives in ``test_serve_arch_matrix``; this file
+pins the *mechanics* the tentpole added:
+
+* the cross-KV block set is static — allocated whole at admission, never
+  extended while the request decodes, freed exactly at retirement — so a
+  long-decoding enc-dec request shows one flat cross residency value;
+* the allocator prices the cross set (and a VLM's frontend rows) at
+  admission, so ``can_allocate`` refusal — not a mid-decode MemoryError —
+  is what backpressure looks like;
+* a VLM's chunked prefill streams precomputed embedding rows, so a chunk
+  may straddle the frontend/token boundary.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get
+from repro.models import lm
+from repro.serve import ContinuousEngine
+from repro.serve.cache import BlockAllocator, CacheConfig, CacheLayout
+
+
+def _engine(arch, kv_len, **kw):
+    cfg = get(arch).reduced()
+    key = jax.random.PRNGKey(0)
+    params = lm.init_params(cfg, key, jnp.float32)
+    return cfg, ContinuousEngine(cfg, params, kv_len=kv_len, **kw)
+
+
+def _fe(cfg, i=0):
+    return jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(7), i),
+                             (cfg.frontend_tokens, cfg.frontend_dim),
+                             jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# static cross block set
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", [{}, {"prefill_chunk": 5}],
+                         ids=["full", "chunked"])
+def test_cross_residency_flat_over_long_decode(mode):
+    """One enc-dec request decoding for many steps: the cross group's
+    residency takes exactly one nonzero value for the whole run (the
+    static set), while the global group's residency grows."""
+    cfg, eng = _engine("seamless-m4t-medium", kv_len=64, n_slots=1,
+                       paged=True, **mode)
+    eng.submit([3, 1, 4, 1, 5], max_new_tokens=40, rid=0, frontend_emb=_fe(cfg))
+    eng.run()
+    cross = [s.resident_by_group.get("cross", 0) for s in eng.telemetry.steps]
+    nonzero = {c for c in cross if c}
+    assert len(nonzero) == 1, nonzero          # flat: the static block set
+    globals_ = [s.resident_by_group.get("global", 0)
+                for s in eng.telemetry.steps]
+    assert max(globals_) > min(g for g in globals_ if g)  # grows with decode
+    eng.allocator.check_no_leaks()
+
+
+def test_cross_blocks_freed_at_retirement():
+    cfg, eng = _engine("seamless-m4t-medium", kv_len=64, n_slots=2,
+                       paged=True)
+    for i in range(3):
+        eng.submit([2, 7, 1], max_new_tokens=3, rid=i, frontend_emb=_fe(cfg, i))
+    eng.run()
+    assert eng.allocator.resident_bytes() == 0
+    eng.allocator.check_no_leaks()
+    assert eng.scheduler.max_slot_reuse() >= 2   # a lane was recycled
+
+
+def test_allocator_prices_cross_at_admission():
+    """cross_cap_blocks is part of blocks_needed; allocate claims the full
+    set up front; extend never touches it; free returns it."""
+    alloc = BlockAllocator(CacheConfig(block_size=4, n_blocks=8))
+    alloc.set_layout(CacheLayout(has_global=True, cross_tokens=6,
+                                 cross_cap_blocks=2))
+    assert alloc.blocks_needed(4) == 1 + 2
+    alloc.allocate(0, 4)
+    assert len(alloc.cross_tables[0]) == 2
+    assert alloc.n_in_use == 3
+    before = list(alloc.cross_tables[0])
+    alloc.extend(0, 8)                          # global grows...
+    assert alloc.cross_tables[0] == before      # ...cross does not
+    assert alloc.n_in_use == 4
+    row = alloc.padded_cross_table(0, 3)
+    assert row[:2] == before and row[2] == alloc.config.null_block
+    alloc.free_slot(0)
+    alloc.check_no_leaks()
+
+
+def test_allocator_frontend_extra_widens_admission_price():
+    """A VLM admission pays for its frontend rows in the global group."""
+    alloc = BlockAllocator(CacheConfig(block_size=4, n_blocks=8))
+    alloc.set_layout(CacheLayout(has_global=True, frontend_extra=8))
+    assert alloc.blocks_needed(4) == 3          # ceil((4 + 8) / 4)
+    alloc.allocate(0, 4)
+    assert len(alloc.tables[0]) == 3
+    # the ledger is physical: extending to 13 resident rows adds a block
+    assert len(alloc.extend(0, 13)) == 1
+    alloc.free_slot(0)
+    alloc.check_no_leaks()
+
+
+def test_cross_set_blocks_admission_until_free():
+    """With room for exactly one cross set, the second enc-dec request
+    waits at the admission gate for the first to retire — backpressure is
+    a can_allocate refusal, never a mid-decode MemoryError (the whole
+    static set is priced up front)."""
+    from repro.serve.scheduler import Request, SlotScheduler
+
+    alloc = BlockAllocator(CacheConfig(block_size=4, n_blocks=3))
+    alloc.set_layout(CacheLayout(has_global=True, cross_tokens=4,
+                                 cross_cap_blocks=1))
+    sched = SlotScheduler(2, alloc, kv_len=8)
+    sched.submit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=4))
+    sched.submit(Request(rid=1, prompt=[4, 5, 6], max_new_tokens=4))
+    admitted = sched.admit(now=0)
+    # each admission costs blocks_for(prompt + 1) + cross cap = 1 + 1; the
+    # 3-block pool fits one request, so FCFS holds the second back
+    assert [a.request.rid for a in admitted] == [0]
+    assert sched.n_pending() == 1
+    # decode growth of the admitted lane never touches the cross set
+    alloc.extend(0, 7)
+    assert len(alloc.cross_tables[sched.active[0].slot]) == 1
+    sched.finish(admitted[0].slot)
+    second = sched.admit(now=1)
+    assert [a.request.rid for a in second] == [1]
+    sched.finish(second[0].slot)
+    alloc.check_no_leaks()
+
+
+# ---------------------------------------------------------------------------
+# VLM chunked prefill: embedding-row stream
+# ---------------------------------------------------------------------------
+
+def test_vlm_chunk_straddles_frontend_boundary():
+    """Reduced phi-3 has 8 frontend rows; chunk=5 puts the second chunk
+    across the frontend/token boundary (rows 5..9 = 3 frontend + 2
+    tokens).  Tokens must still match the whole-prefill paged engine."""
+    cfg = get("phi-3-vision-4.2b").reduced()
+    key = jax.random.PRNGKey(0)
+    params = lm.init_params(cfg, key, jnp.float32)
+    prompt = [5, 9, 2, 6, 1, 3, 8]
+    fe = _fe(cfg)
+    outs = {}
+    for name, kw in (("full", {}), ("chunked", {"prefill_chunk": 5})):
+        eng = ContinuousEngine(cfg, params, kv_len=56, n_slots=1,
+                               paged=True, **kw)
+        eng.submit(prompt, max_new_tokens=6, rid=0, frontend_emb=fe)
+        outs[name] = eng.run()[0]
+        eng.allocator.check_no_leaks()
+    assert outs["full"] == outs["chunked"]
+
+
+def test_embed_prompt_rows_matches_forward_embedding():
+    """The precomputed row stream equals what forward's own embedding +
+    frontend projection produces (prefix property of chunked prefill)."""
+    cfg = get("phi-3-vision-4.2b").reduced()
+    key = jax.random.PRNGKey(1)
+    params = lm.init_params(cfg, key, jnp.float32)
+    tokens = jnp.asarray([4, 2, 9], jnp.int32)
+    fe = _fe(cfg)
+    rows = lm.embed_prompt_rows(cfg, params, tokens, fe)
+    assert rows.shape == (cfg.frontend_tokens + 3, cfg.d_model)
+    want_fe = fe @ params["frontend_proj"]
+    want_tok = jnp.take(params["embed"], tokens, axis=0)
+    assert jnp.array_equal(rows[:cfg.frontend_tokens], want_fe)
+    assert jnp.array_equal(rows[cfg.frontend_tokens:], want_tok)
+
+
+def test_vlm_kv_len_alignment_error_names_frontend_rows():
+    cfg = get("phi-3-vision-4.2b").reduced()
+    with pytest.raises(ValueError, match="frontend rows"):
+        ContinuousEngine(cfg, params={}, kv_len=64, paged=True)
+
+
+def test_encdec_prefill_without_embeddings_raises():
+    """A forgotten frontend_emb must fail loudly — without the guard the
+    dense cache's zero-initialized xattn leaves would silently serve as
+    cross-KV (only the serving chunk path, which carries cross tables,
+    may run an encoder-less prefill)."""
+    cfg = get("seamless-m4t-medium").reduced()
+    key = jax.random.PRNGKey(0)
+    params = lm.init_params(cfg, key, jnp.float32)
+    tokens = jnp.asarray([[1, 2, 3]], jnp.int32)
+    with pytest.raises(AssertionError, match="frontend_emb"):
+        lm.forward(cfg, params, tokens,
+                   cache=lm.init_cache(cfg, 1, 16, jnp.float32),
+                   mode="prefill")

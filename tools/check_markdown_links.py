@@ -1,10 +1,15 @@
 #!/usr/bin/env python
-"""Markdown link checker for README.md and docs/ (stdlib only, used by CI).
+"""Markdown link checker (stdlib only, used by CI).
 
-Checks every relative link and image target in the repo's markdown files
-resolves to an existing file or directory (anchors are stripped; external
-http(s)/mailto links are not fetched).  Exits nonzero listing the broken
-links, so a doc reorganisation cannot silently strand references.
+Scans every top-level markdown file — README.md, ROADMAP.md, CHANGES.md,
+ISSUE.md, and friends — plus everything under docs/, and checks that every
+relative link and image target resolves to an existing file or directory
+(anchors are stripped; external http(s)/mailto links are not fetched).
+
+All files are checked in one pass and every broken link is reported before
+the nonzero exit, so a doc reorganisation surfaces the full damage at once
+instead of one file per CI round trip.  Unreadable files are reported as
+problems rather than aborting the scan.
 
     python tools/check_markdown_links.py [root]
 """
@@ -27,8 +32,12 @@ def iter_markdown(root: Path):
 
 
 def check_file(md: Path, root: Path) -> list[str]:
+    try:
+        text = md.read_text(encoding="utf-8")
+    except OSError as exc:
+        return [f"{md.relative_to(root)}: unreadable ({exc})"]
     broken = []
-    for target in LINK_RE.findall(md.read_text(encoding="utf-8")):
+    for target in LINK_RE.findall(text):
         if target.startswith(SKIP_SCHEMES):
             continue
         path = target.split("#", 1)[0]
