@@ -3,6 +3,13 @@
 Scenarios: cost-model error (heterogeneous devices the compiler did not
 know about) and co-located interference. Metric: modeled step time before
 vs after the assistant protocol runs, + number of migrations.
+
+The adaptation now flows through the typed plan protocol: the compiler
+emits a ``CompiledPlan`` for the topology it *believed* in, the assistants
+run against the *real* cost model and emit ``PlanDelta`` records, and the
+trace is replayed through ``CompiledPlan.apply_trace`` — every row asserts
+the replayed plan matches the assistants' in-place result (the audit
+property serving telemetry relies on).
 """
 
 from __future__ import annotations
@@ -10,9 +17,8 @@ from __future__ import annotations
 import time
 
 from repro.configs import get
-from repro.core import (AssistantConfig, CostModel, block_partition,
-                        build_graph, heterogeneous_devices,
-                        homogeneous_devices, modeled_step_time,
+from repro.core import (AssistantConfig, CostModel, PartitionStrategy,
+                        Topology, compile_plan, modeled_step_time,
                         run_adaptation)
 from repro.models.config import SHAPES
 
@@ -30,18 +36,19 @@ def run(archs=("tinyllama-1.1b", "mixtral-8x7b", "recurrentgemma-2b")):
     rows = []
     for arch in archs:
         cfg = get(arch)
-        g = build_graph(cfg, SHAPES["train_4k"])
-        plan_cm = CostModel(homogeneous_devices(8))
-        plan_cm.select_relocatable(g)
-        plan_cm.tag_nodes(g)
-        a0 = block_partition(g, plan_cm)
+        # the compiler's belief: 8 uniform devices, block init (no refine —
+        # the assistants are the ones doing the adapting here)
+        plan = compile_plan(cfg, SHAPES["train_4k"], Topology.homogeneous(8),
+                            strategy=PartitionStrategy(refine=False),
+                            cache=False)
+        g, a0 = plan.graph, plan.assignment
 
         for scen, speeds in SCENARIOS.items():
             if speeds is not None:
-                real_cm = CostModel(heterogeneous_devices(speeds))
+                real_cm = CostModel(Topology.heterogeneous(speeds))
                 interference = None
             else:
-                real_cm = plan_cm
+                real_cm = plan.cost_model
                 res = ("compute" if "compute" in scen else "memory")
                 interference = [{res: 2.5}, {}, {}, {}, {}, {}, {}, {}]
             t_before = modeled_step_time(g, a0, real_cm, interference)
@@ -50,14 +57,19 @@ def run(archs=("tinyllama-1.1b", "mixtral-8x7b", "recurrentgemma-2b")):
                 g, dict(a0), real_cm, interference=interference,
                 config=AssistantConfig(theta=0.9, gamma=0.6), max_steps=60)
             us = (time.perf_counter() - t0) * 1e6
-            n_migs = sum(len(m) for m in trace.migrations)
+            # replay the typed delta trace through the plan artifact: the
+            # final applied plan must equal the assistants' working result
+            adapted = plan.apply_trace(trace)
+            assert adapted.assignment == trace.replay(a0), \
+                f"{arch}/{scen}: delta trace failed to replay"
             rows.append({
                 "name": f"assistants/{arch}/{scen}",
                 "us_per_call": us,
                 "t_before_ms": t_before * 1e3,
                 "t_after_ms": trace.step_times[-1] * 1e3,
                 "improvement": 1 - trace.step_times[-1] / t_before,
-                "migrations": n_migs,
+                "migrations": len(trace.deltas),
+                "delta_gain_ms": sum(d.gain for d in trace.deltas) * 1e3,
             })
     return rows
 

@@ -12,8 +12,9 @@ from __future__ import annotations
 import time
 
 from repro.configs import get
-from repro.core import (CostModel, balance_stats, build_graph,
-                        homogeneous_devices, multilevel_partition, partition)
+from repro.core import (CompiledPlan, CostModel, PartitionStrategy,
+                        Topology, balance_stats, build_graph, compile_plan,
+                        multilevel_partition, partition)
 from repro.models.config import SHAPES
 
 ARCHS = ["tinyllama-1.1b", "command-r-35b", "gemma2-9b", "mixtral-8x7b",
@@ -22,11 +23,12 @@ ARCHS = ["tinyllama-1.1b", "command-r-35b", "gemma2-9b", "mixtral-8x7b",
 
 
 def run(k: int = 16, shape_name: str = "train_4k"):
+    topology = Topology.homogeneous(k)
     rows = []
     for arch in ARCHS:
         cfg = get(arch)
         g = build_graph(cfg, SHAPES[shape_name])
-        cm = CostModel(homogeneous_devices(k))
+        cm = CostModel(topology)
         cm.select_relocatable(g)
         for strategy in ("block", "random"):
             for refine in (False, True):
@@ -55,6 +57,23 @@ def run(k: int = 16, shape_name: str = "train_4k"):
             "cut_bytes": res.cut_after,
             "imbalance": st["imbalance"],
             "passes": res.passes,
+            "nodes": len(g),
+        })
+        # the end-to-end artifact path: compile -> serialize -> reload must
+        # reproduce the same placement bit-identically (cache bypassed so
+        # the timing column stays honest)
+        t0 = time.perf_counter()
+        plan = compile_plan(cfg, SHAPES[shape_name], topology,
+                            strategy=PartitionStrategy(), cache=False)
+        us = (time.perf_counter() - t0) * 1e6
+        reloaded = CompiledPlan.from_json(plan.to_json(), verify=True)
+        assert reloaded.assignment == plan.assignment
+        rows.append({
+            "name": f"compile/{arch}/artifact",
+            "us_per_call": us,
+            "cut_bytes": plan.cut_bytes,
+            "imbalance": plan.balance()["imbalance"],
+            "passes": plan.result.passes,
             "nodes": len(g),
         })
     return rows

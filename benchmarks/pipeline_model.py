@@ -12,8 +12,8 @@ from __future__ import annotations
 import time
 
 from repro.configs import get
-from repro.core import (CostModel, balance_stats, build_graph, cut_bytes,
-                        homogeneous_devices, modeled_step_time, partition)
+from repro.core import (CostModel, Topology, balance_stats, build_graph,
+                        cut_bytes, modeled_step_time, partition)
 from repro.models.config import SHAPES
 
 ARCHS = ["gemma2-9b", "deepseek-v2-lite-16b", "recurrentgemma-2b",
@@ -39,7 +39,7 @@ def run(k: int = 16):
     for arch in ARCHS:
         cfg = get(arch)
         g = build_graph(cfg, SHAPES["train_4k"])
-        cm = CostModel(homogeneous_devices(k))
+        cm = CostModel(Topology.homogeneous(k))
         cm.select_relocatable(g)
 
         naive = naive_equal_layer(g, cfg, k)

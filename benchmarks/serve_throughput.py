@@ -34,8 +34,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get
+from repro.core import Topology, compile_plan
 from repro.models import lm
 from repro.serve import ContinuousEngine, Engine
+
+
+def _serve_plan(cfg, kv_len: int, n_slots: int, devices: int = 4):
+    """Compile (or fetch from the plan cache) the placement artifact for
+    the decode traffic a benchmark engine serves; the engine sizes its
+    cache length and lane count from it (``plan=``)."""
+    shape = ContinuousEngine.decode_shape_for(kv_len, n_slots)
+    return compile_plan(cfg, shape, Topology.homogeneous(devices))
 
 
 def _trace(key, cfg, n_requests: int, prompt_len: int):
@@ -67,7 +76,11 @@ def run(arch: str = "tinyllama-1.1b", n_requests: int = 12, n_slots: int = 4,
     total_tokens = sum(budgets)
 
     # -- continuous batching ----------------------------------------------------
-    cont = ContinuousEngine(cfg, params, kv_len=kv_len, n_slots=n_slots)
+    # the engine is sized by the compiled-plan artifact (kv_len / n_slots
+    # come from the plan's decode shape, not re-derived at the call site)
+    cont = ContinuousEngine(cfg, params,
+                            plan=_serve_plan(cfg, kv_len, n_slots))
+    assert cont.kv_len == kv_len and cont.n_slots == n_slots
     # warm the jitted prefill/decode so neither engine is charged compile time
     cont.submit(prompts[0], max_new_tokens=2, rid="warmup")
     cont.run()
@@ -138,8 +151,10 @@ def run(arch: str = "tinyllama-1.1b", n_requests: int = 12, n_slots: int = 4,
 def _run_continuous(cfg, params, prompts, budgets, kv_len, n_slots,
                     stagger, name, fes=None, **engine_kw) -> dict:
     """Drive one continuous-engine trace; returns a result row."""
-    eng = ContinuousEngine(cfg, params, kv_len=kv_len, n_slots=n_slots,
+    eng = ContinuousEngine(cfg, params,
+                           plan=_serve_plan(cfg, kv_len, n_slots),
                            **engine_kw)
+    assert eng.kv_len == kv_len and eng.n_slots == n_slots
     fes = fes or [None] * len(prompts)
     eng.submit(prompts[0], max_new_tokens=2, rid="warmup",
                frontend_emb=fes[0])                          # compile warmup

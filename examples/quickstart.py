@@ -1,9 +1,12 @@
 """Quickstart: the paper's pipeline end-to-end on one page.
 
-1. Build the costed dataflow graph for an architecture (compiler phase 1-2).
+1. Describe the machine (``Topology``) and build the costed dataflow graph
+   for an architecture (compiler phases 1-2).
 2. Partition it: block init + directed-KL refinement (phases 3-4).
-3. Realize the plan (pipeline stages / tensor shardings).
-4. Simulate interference and let the §3 scheduling assistants adapt.
+3. Compile the reusable ``CompiledPlan`` artifact (serializable, cached,
+   hash-keyed by config x shape x topology x strategy).
+4. Simulate interference and let the §3 scheduling assistants adapt the
+   plan through typed ``PlanDelta`` records.
 
 Runs in seconds on CPU — no devices needed (pure planning).
 
@@ -11,22 +14,24 @@ Runs in seconds on CPU — no devices needed (pure planning).
 """
 
 from repro.configs import get
-from repro.core import (AssistantConfig, CostModel, build_graph,
-                        homogeneous_devices, modeled_step_time, partition,
-                        plan_model, run_adaptation)
+from repro.core import (AssistantConfig, CompiledPlan, CostModel, Topology,
+                        adapt_plan, build_graph, compile_plan,
+                        modeled_step_time, partition)
 from repro.models.config import SHAPES
 
 
 def main():
     cfg = get("gemma2-9b")
     shape = SHAPES["train_4k"]
+    topology = Topology.homogeneous(8)
+    print(f"[topology] {topology.describe()}")
 
     # -- phases 1-2: graph + analytical costs --------------------------------
     g = build_graph(cfg, shape)
     print(f"[graph] {g.summary()}")
 
-    # -- phases 3-4: partition onto 8 devices ---------------------------------
-    cm = CostModel(homogeneous_devices(8))
+    # -- phases 3-4: partition onto the topology ------------------------------
+    cm = CostModel(topology)
     cm.select_relocatable(g)
     cm.tag_nodes(g)
     for strategy in ("block", "random"):
@@ -35,21 +40,31 @@ def main():
               f"{res.cut_after:.3e} bytes in {res.passes} passes "
               f"({res.comm_moves} comm / {res.balance_moves} balance moves)")
 
-    # -- full plan: stages for the pipeline backend ----------------------------
-    plan = plan_model(cfg, shape, k=8, backend="pipeline")
-    print(f"[plan] {plan.describe()}")
+    # -- the compiled artifact: plan once, reuse everywhere --------------------
+    plan = compile_plan(cfg, shape, topology, backend="pipeline")
+    print(f"[plan] {plan.describe()}"
+          + (" (plan-cache hit)" if plan.from_cache else ""))
     print(f"[plan] layer->stage: {plan.layer_to_stage}")
+    # the artifact round-trips through JSON bit-identically
+    clone = CompiledPlan.from_json(plan.to_json(), verify=True)
+    assert clone.assignment == plan.assignment
+    print(f"[plan] JSON round-trip OK ({len(plan.to_json()['graph']['nodes'])}"
+          " nodes serialized)")
 
     # -- §3: scheduling assistants under interference --------------------------
     interference = [{"compute": 2.5}] + [{}] * 7  # co-located app on device 0
     t0 = modeled_step_time(plan.graph, plan.assignment, plan.cost_model,
                            interference)
-    trace = run_adaptation(plan.graph, dict(plan.assignment), plan.cost_model,
-                           interference=interference,
-                           config=AssistantConfig(theta=0.9, gamma=0.6))
+    adapted, trace = adapt_plan(plan, interference=interference,
+                                config=AssistantConfig(theta=0.9, gamma=0.6))
     print(f"[assistants] step time {t0*1e3:.1f}ms -> "
           f"{trace.step_times[-1]*1e3:.1f}ms after "
-          f"{sum(len(m) for m in trace.migrations)} migrations")
+          f"{len(trace.deltas)} PlanDelta records")
+    for d in trace.deltas[:5]:
+        print(f"[assistants]   {d.node}: {d.src} -> {d.dst} "
+              f"({d.resource}, gain {d.gain*1e3:+.2f}ms)")
+    assert adapted.assignment == trace.replay(plan.assignment)
+    print("[assistants] trace replays cleanly through CompiledPlan.apply")
 
 
 if __name__ == "__main__":

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs
-from repro.core import plan_model
+from repro.core import Topology, compile_plan
 from repro.launch.mesh import make_production_mesh
 from repro.models.config import SHAPES
 from repro.optim import adamw
@@ -37,8 +37,9 @@ def main():
     mesh = make_production_mesh()           # (16, 16) data x model(=stages)
     n_stages = 16
 
-    # the paper's compiler chooses the stage assignment
-    plan = plan_model(cfg, shape, k=n_stages, backend="pipeline")
+    # the paper's compiler chooses the stage assignment (plan-cache backed)
+    plan = compile_plan(cfg, shape, Topology.homogeneous(n_stages),
+                        backend="pipeline")
     print(f"[plan] {plan.describe()}")
     print(f"[plan] predicted inter-stage traffic (cut): "
           f"{plan.cut_bytes/2**30:.2f} GiB/step")

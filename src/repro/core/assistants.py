@@ -65,14 +65,20 @@ def simulate_utilization(graph: Graph, assignment: dict[str, int],
         busy[d]["memory"] += node.bytes_accessed / dev.eff_hbm
     for e in graph.edges:
         if assignment[e.src] != assignment[e.dst] and e.weight:
-            busy[assignment[e.src]]["network"] += e.weight / cost_model.devices[assignment[e.src]].link_bw
-            busy[assignment[e.dst]]["network"] += e.weight / cost_model.devices[assignment[e.dst]].link_bw
+            t_link = cost_model.link_cost(e.weight, assignment[e.src],
+                                          assignment[e.dst])
+            busy[assignment[e.src]]["network"] += t_link
+            busy[assignment[e.dst]]["network"] += t_link
     if interference:
         for d in range(k):
             for r, mult in interference[d].items():
                 busy[d][r] *= mult
     step_time = max(max(b.values()) for b in busy) or 1.0
-    return [{r: min(1.0, b[r] / step_time) for r in b} for b in busy]
+    # a disconnected-link crossing prices as inf (cost_model.link_cost);
+    # inf/inf is nan, so pin saturated resources to 1.0 explicitly
+    def util(t: float) -> float:
+        return 1.0 if t == step_time else min(1.0, t / step_time)
+    return [{r: util(b[r]) for r in b} for b in busy]
 
 
 def modeled_step_time(graph: Graph, assignment: dict[str, int],
@@ -89,7 +95,8 @@ def modeled_step_time(graph: Graph, assignment: dict[str, int],
         busy[d]["memory"] += node.bytes_accessed / dev.eff_hbm
     for e in graph.edges:
         if assignment[e.src] != assignment[e.dst] and e.weight:
-            busy[assignment[e.dst]]["network"] += e.weight / cost_model.devices[assignment[e.dst]].link_bw
+            busy[assignment[e.dst]]["network"] += cost_model.link_cost(
+                e.weight, assignment[e.src], assignment[e.dst])
     if interference:
         for d in range(k):
             for r, mult in interference[d].items():
@@ -98,16 +105,62 @@ def modeled_step_time(graph: Graph, assignment: dict[str, int],
     return max(max(b["compute"], b["memory"]) + b["network"] for b in busy)
 
 
+def find_unlinked_cut(graph: Graph, assignment: dict[str, int], nid: str,
+                      dst: int, topology) -> Optional[tuple]:
+    """The first data edge a ``nid -> dst`` move would cut across a
+    missing fabric link (zero topology bandwidth), as ``(src_dev,
+    dst_dev, edge)`` — or None when the move is link-feasible.  Shared by
+    the assistants' acquire rule and ``CompiledPlan.validate_delta`` so
+    the two can never drift apart on what counts as reachable."""
+    for e in graph.in_edges(nid):
+        src_dev = assignment[e.src]
+        if e.weight and src_dev != dst and topology.link_bw(src_dev, dst) <= 0:
+            return (src_dev, dst, e)
+    for e in graph.out_edges(nid):
+        dst_dev = assignment[e.dst]
+        if e.weight and dst_dev != dst and topology.link_bw(dst, dst_dev) <= 0:
+            return (dst, dst_dev, e)
+    return None
+
+
 # =============================================================================
 # The assistant protocol
 # =============================================================================
 
 @dataclass
-class Migration:
+class PlanDelta:
+    """One typed adaptation record: move ``node`` from ``src`` to ``dst``.
+
+    The assistants emit these instead of silently mutating raw assignment
+    dicts; ``CompiledPlan.apply`` validates and applies them transactionally,
+    so a serving run's adaptation history is an auditable, replayable trace.
+    ``gain`` is the modeled step-time reduction of this single move (filled
+    by ``run_adaptation``; 0.0 when unknown), ``cycle`` the assistant cycle
+    that produced it."""
+
     node: str
     src: int
     dst: int
-    resource: str
+    resource: str = ""
+    gain: float = 0.0
+    cycle: int = -1
+
+    def to_json(self) -> dict:
+        return {"node": self.node, "src": self.src, "dst": self.dst,
+                "resource": self.resource, "gain": self.gain,
+                "cycle": self.cycle}
+
+    @classmethod
+    def from_json(cls, doc: dict) -> "PlanDelta":
+        return cls(node=doc["node"], src=int(doc["src"]), dst=int(doc["dst"]),
+                   resource=doc.get("resource", ""),
+                   gain=float(doc.get("gain", 0.0)),
+                   cycle=int(doc.get("cycle", -1)))
+
+
+# Deprecated name, kept for one release: the out-box records were called
+# ``Migration`` before the typed adaptation protocol landed.
+Migration = PlanDelta
 
 
 @dataclass
@@ -154,8 +207,8 @@ class SchedulingAssistants:
 
     # -- rule 2: underloaded devices acquire nodes ------------------------------
     def _acquire(self, assignment: dict[str, int],
-                 utils: list[dict[str, float]]) -> list[Migration]:
-        migrations: list[Migration] = []
+                 utils: list[dict[str, float]]) -> list[PlanDelta]:
+        migrations: list[PlanDelta] = []
         for d in range(self.cm.k):
             for res in ("compute", "memory", "network"):
                 if utils[d][res] >= self.cfg.gamma:
@@ -168,16 +221,32 @@ class SchedulingAssistants:
                 if not donors:
                     continue
                 q = donors[0]
-                nid = self.state.out_boxes[q][res].pop(0)
+                box = self.state.out_boxes[q][res]
+                nid = box[0]
                 if assignment.get(nid) != q:
-                    continue  # stale offer
+                    box.pop(0)  # stale offer: the node moved away, discard
+                    continue
+                if find_unlinked_cut(self.g, assignment, nid, d,
+                                     self.cm.topology) is not None:
+                    # no fabric link for the cut this acquirer would
+                    # create — leave the offer for a linked device
+                    continue
+                box.pop(0)
                 assignment[nid] = d
-                migrations.append(Migration(nid, q, d, res))
+                migrations.append(PlanDelta(nid, q, d, res,
+                                            cycle=self._clock))
         return migrations
 
     def step(self, assignment: dict[str, int],
-             utils: list[dict[str, float]]) -> list[Migration]:
-        """One assistant cycle: offers then acquisitions. Mutates assignment."""
+             utils: list[dict[str, float]]) -> list[PlanDelta]:
+        """One assistant cycle: offers then acquisitions.
+
+        Emits the accepted moves as typed :class:`PlanDelta` records.  The
+        *working* ``assignment`` dict is updated in place so the next cycle's
+        offers see the new placement (legacy contract); callers holding a
+        ``CompiledPlan`` should feed it a copy and apply the returned deltas
+        through ``CompiledPlan.apply`` (see ``repro.core.plan.adapt_plan``).
+        """
         self._clock += 1
         self._offer(assignment, utils)
         migrations = self._acquire(assignment, utils)
@@ -189,13 +258,44 @@ class SchedulingAssistants:
 @dataclass
 class AdaptationTrace:
     step_times: list[float]
-    migrations: list[list[Migration]]
+    migrations: list[list[PlanDelta]]
 
     @property
     def improvement(self) -> float:
         if not self.step_times:
             return 0.0
         return 1.0 - self.step_times[-1] / self.step_times[0]
+
+    @property
+    def deltas(self) -> list[PlanDelta]:
+        """The flat, ordered adaptation trace (replayable)."""
+        return [m for migs in self.migrations for m in migs]
+
+    def replay(self, assignment: dict[str, int]) -> dict[str, int]:
+        """Re-apply the trace to a fresh copy of ``assignment``.
+
+        Raises ``ValueError`` on a stale delta (node not on the recorded
+        ``src``), so a trace can only replay against the placement it was
+        recorded from — the audit property serving telemetry relies on."""
+        assignment = dict(assignment)
+        for d in self.deltas:
+            if assignment.get(d.node) != d.src:
+                raise ValueError(
+                    f"stale delta: {d.node} is on "
+                    f"{assignment.get(d.node)}, trace expected {d.src}")
+            assignment[d.node] = d.dst
+        return assignment
+
+    def to_json(self) -> dict:
+        return {"step_times": list(self.step_times),
+                "migrations": [[m.to_json() for m in migs]
+                               for migs in self.migrations]}
+
+    @classmethod
+    def from_json(cls, doc: dict) -> "AdaptationTrace":
+        return cls(step_times=[float(t) for t in doc["step_times"]],
+                   migrations=[[PlanDelta.from_json(m) for m in migs]
+                               for migs in doc["migrations"]])
 
 
 def run_adaptation(graph: Graph, assignment: dict[str, int],
@@ -216,12 +316,29 @@ def run_adaptation(graph: Graph, assignment: dict[str, int],
     telemetry = telemetry or (lambda a: simulate_utilization(
         graph, a, cost_model, interference))
     times = [modeled_step_time(graph, assignment, cost_model, interference)]
-    all_migrations: list[list[Migration]] = []
+    all_migrations: list[list[PlanDelta]] = []
     for _ in range(max_steps):
         utils = telemetry(assignment)
+        prev = dict(assignment)
         migs = assistants.step(assignment, utils)
+        # attribute a modeled gain to each delta by applying the cycle's
+        # moves one at a time to the pre-cycle placement (sequential, so
+        # the per-delta gains sum to the cycle's total change; gains
+        # telescope across cycles to times[0] - times[-1])
+        t_prev = times[-1]
+        for m in migs:
+            prev[m.node] = m.dst
+            t_next = modeled_step_time(graph, prev, cost_model, interference)
+            m.gain = t_prev - t_next
+            t_prev = t_next
+        # prev has converged to the post-cycle assignment, so t_prev IS
+        # this cycle's step time — no recomputation needed
         all_migrations.append(migs)
-        times.append(modeled_step_time(graph, assignment, cost_model, interference))
+        times.append(t_prev)
+        # legacy termination: stop only once nothing moved AND every offer
+        # was consumed.  An offer no underloaded device can take (e.g.
+        # link-infeasible on a partial fabric) keeps the loop idling to
+        # max_steps — idle cycles are cheap (one utilization simulation).
         if not migs and not any(
                 any(box.values()) for box in assistants.state.out_boxes):
             break

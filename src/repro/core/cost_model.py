@@ -60,11 +60,22 @@ def heterogeneous_devices(speed_factors: list[float],
 
 
 class CostModel:
-    """Maps (node, device) -> time and annotates nodes with §3 resource tags."""
+    """Maps (node, device) -> time and annotates nodes with §3 resource tags.
 
-    def __init__(self, devices: list[DeviceSpec], mode: str = "roofline"):
+    Accepts either a :class:`repro.core.topology.Topology` (the plan-centric
+    API: devices + pairwise interconnect bandwidth) or a bare device list
+    (the legacy surface, wrapped into a uniform-fabric topology).
+    """
+
+    def __init__(self, devices, mode: str = "roofline"):
         assert mode in ("paper", "roofline")
-        self.devices = devices
+        if isinstance(devices, (list, tuple)):
+            # legacy surface: wrap the device list in a uniform fabric
+            from .topology import Topology
+            self.topology = Topology.from_devices(devices)
+        else:
+            self.topology = devices
+        self.devices = list(self.topology.devices)
         self.mode = mode
 
     @property
@@ -84,6 +95,21 @@ class CostModel:
     def edge_cost(self, bytes: float, device_idx: int) -> float:
         """Seconds to move ``bytes`` across one link of ``device_idx``."""
         return bytes / self.devices[device_idx].link_bw
+
+    def link_cost(self, bytes: float, src: int, dst: int) -> float:
+        """Seconds to move ``bytes`` over the ``src -> dst`` fabric link.
+
+        Uses the topology's pairwise bandwidth matrix — on the default
+        uniform fabric this equals ``edge_cost`` at the slower endpoint.
+        A zero-bandwidth off-diagonal entry means *no link*: moving data
+        across it costs infinity (so a cut there can never look cheap),
+        not zero."""
+        if src == dst:
+            return 0.0
+        bw = self.topology.link_bw(src, dst)
+        if bw <= 0:
+            return float("inf") if bytes > 0 else 0.0
+        return bytes / bw
 
     # -- §3: compute/memory/network-bound tagging -------------------------------
     def tag_nodes(self, graph: Graph, device_idx: int = 0) -> None:

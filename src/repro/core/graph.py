@@ -124,6 +124,42 @@ class Graph:
         for e in self.edges:
             assert e.bytes >= 0.0
 
+    # -- serialization (compiled-plan artifacts) --------------------------------
+    def to_json(self) -> dict:
+        """Nodes (in insertion order) + edges (in creation order).
+
+        Insertion order is preserved on load so every order-dependent
+        consumer (topo seeding, cost summation) reproduces bit-identical
+        results from a deserialized graph."""
+        return {
+            "nodes": [{
+                "id": n.id, "kind": n.kind, "flops": n.flops,
+                "bytes_accessed": n.bytes_accessed,
+                "param_bytes": n.param_bytes,
+                "relocatable": n.relocatable, "layer": n.layer,
+                "tag": n.tag, **({"meta": n.meta} if n.meta else {}),
+            } for n in self.nodes.values()],
+            "edges": [{
+                "src": e.src, "dst": e.dst, "bytes": e.bytes,
+                "control": e.control,
+            } for e in self.edges],
+        }
+
+    @classmethod
+    def from_json(cls, doc: dict) -> "Graph":
+        g = cls()
+        for nd in doc["nodes"]:
+            g.add_node(Node(
+                id=nd["id"], kind=nd["kind"], flops=float(nd["flops"]),
+                bytes_accessed=float(nd["bytes_accessed"]),
+                param_bytes=float(nd["param_bytes"]),
+                relocatable=bool(nd["relocatable"]), layer=nd["layer"],
+                tag=nd.get("tag", TAG_COMPUTE), meta=dict(nd.get("meta", {}))))
+        for ed in doc["edges"]:
+            g.add_edge(ed["src"], ed["dst"], bytes=float(ed["bytes"]),
+                       control=bool(ed["control"]))
+        return g
+
     # -- aggregate stats -----------------------------------------------------
     def total_flops(self) -> float:
         return sum(n.flops for n in self.nodes.values())

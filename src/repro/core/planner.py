@@ -1,91 +1,36 @@
-"""End-to-end planning: model config -> costed graph -> partition -> Plan.
+"""Deprecated planning surface — kept for one release.
 
-This is the paper's "DNN compiler" driver: it runs phases 1-4 (node selection,
-cost modeling, initial partitioning, iterative repartitioning) and emits a
-``Plan`` that the launch layer realizes on a TPU mesh — as pipeline stages
-(shard_map + ppermute; the faithful realization of device placement) or as a
-tensor-parallel layout (the beyond-paper baseline the roofline table uses).
+The compiler's real entry point is now :func:`repro.core.plan.compile`,
+which takes an explicit :class:`repro.core.topology.Topology` and returns a
+serializable, cacheable :class:`repro.core.plan.CompiledPlan` (see
+docs/compiler.md for the migration notes).  This module keeps the legacy
+names importable:
+
+* ``Plan`` — alias of :class:`CompiledPlan` (the old dataclass's fields and
+  properties are all preserved on the new artifact);
+* ``plan_model(cfg, shape, k=int, device=..., devices=...)`` — thin shim
+  that builds the equivalent ``Topology`` and calls ``compile`` with the
+  on-disk plan cache bypassed (exactly the old ephemeral behaviour).
+
+Both emit :class:`DeprecationWarning`; out-of-tree callers should move to::
+
+    from repro.core import Topology, compile_plan
+    plan = compile_plan(cfg, shape, Topology.homogeneous(8))
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import warnings
 from typing import Optional
 
 from repro.models.config import ModelConfig, ShapeConfig
 
-from .assistants import modeled_step_time
-from .cost_model import CostModel, DeviceSpec, TPU_V5E, homogeneous_devices
-from .graph import Graph
-from .graphgen import build_graph
-from .partitioner import RefineResult, balance_stats, cut_bytes, partition
+from .cost_model import DeviceSpec, TPU_V5E
+from .plan import CompiledPlan, PartitionStrategy, compile_plan
+from .topology import Topology
 
-
-@dataclass
-class Plan:
-    cfg: ModelConfig
-    shape: ShapeConfig
-    k: int
-    backend: str                       # "tensor" | "pipeline"
-    assignment: dict[str, int]
-    layer_to_stage: list[int]          # decoder layer index -> stage
-    enc_layer_to_stage: list[int]      # encoder layer index -> stage
-    result: RefineResult
-    graph: Graph = field(repr=False, default=None)
-    cost_model: CostModel = field(repr=False, default=None)
-
-    @property
-    def cut_bytes(self) -> float:
-        return cut_bytes(self.graph, self.assignment)
-
-    @property
-    def step_time(self) -> float:
-        return modeled_step_time(self.graph, self.assignment, self.cost_model)
-
-    def balance(self) -> dict:
-        return balance_stats(self.graph, self.assignment, self.cost_model)
-
-    def stage_boundaries(self) -> list[int]:
-        """Layer indices at which a new stage starts (pipeline realization)."""
-        bounds = [0]
-        for i in range(1, len(self.layer_to_stage)):
-            if self.layer_to_stage[i] != self.layer_to_stage[i - 1]:
-                bounds.append(i)
-        return bounds
-
-    def describe(self) -> str:
-        b = self.balance()
-        return (f"Plan[{self.cfg.name} x {self.shape.name} k={self.k} "
-                f"{self.backend}] cut={self.cut_bytes:.3e}B "
-                f"imbalance={b['imbalance']:.3f} "
-                f"stages={self.stage_boundaries()} "
-                f"t_step={self.step_time*1e3:.2f}ms")
-
-
-def _layer_stage_table(graph: Graph, assignment: dict[str, int],
-                       cost_model: CostModel, n_layers: int,
-                       enc: bool = False) -> list[int]:
-    """Per-layer stage = cost-weighted majority of the layer's nodes,
-    then made monotone non-decreasing (pipeline stages must respect topology).
-    Encoder layers are numbered from 1000 in graphgen."""
-    base = 1000 if enc else 0
-    votes: list[dict[int, float]] = [dict() for _ in range(n_layers)]
-    for nid, dev in assignment.items():
-        node = graph.nodes[nid]
-        if node.layer is None:
-            continue
-        li = node.layer - base
-        if 0 <= li < n_layers:
-            votes[li][dev] = votes[li].get(dev, 0.0) + \
-                cost_model.node_cost(node, dev)
-    table = []
-    for li in range(n_layers):
-        stage = max(votes[li].items(), key=lambda kv: kv[1])[0] if votes[li] else 0
-        table.append(stage)
-    # monotone fix-up
-    for i in range(1, n_layers):
-        table[i] = max(table[i], table[i - 1])
-    return table
+# Deprecated alias: the plan artifact used to be an ephemeral ``Plan``.
+Plan = CompiledPlan
 
 
 def plan_model(cfg: ModelConfig, shape: ShapeConfig, k: int, *,
@@ -94,21 +39,22 @@ def plan_model(cfg: ModelConfig, shape: ShapeConfig, k: int, *,
                gain_mode: str = "paper", seed: int = 0,
                device: DeviceSpec = TPU_V5E,
                devices: Optional[list[DeviceSpec]] = None,
-               cost_mode: str = "roofline") -> Plan:
-    """Run the paper's compiler pipeline for one (arch x shape) cell."""
-    assert backend in ("tensor", "pipeline")
-    graph = build_graph(cfg, shape)
-    cm = CostModel(devices or homogeneous_devices(k, device), mode=cost_mode)
-    cm.select_relocatable(graph)            # phase 1
-    cm.tag_nodes(graph)                     # §3 tags for the assistants
-    res = partition(                        # phases 3-4
-        graph, cm, strategy=strategy, refine=refine,
-        epsilon_frac=epsilon_frac, gain_mode=gain_mode,
-        convex=(backend == "pipeline"), seed=seed)
-    table = _layer_stage_table(graph, res.assignment, cm, cfg.n_layers)
-    enc_table = _layer_stage_table(graph, res.assignment, cm,
-                                   cfg.n_enc_layers, enc=True)
-    return Plan(cfg=cfg, shape=shape, k=k, backend=backend,
-                assignment=res.assignment, layer_to_stage=table,
-                enc_layer_to_stage=enc_table, result=res,
-                graph=graph, cost_model=cm)
+               cost_mode: str = "roofline") -> CompiledPlan:
+    """DEPRECATED: use ``repro.core.plan.compile`` with a ``Topology``.
+
+    Runs the same compiler pipeline for one (arch x shape) cell, with the
+    ``k: int`` (+ optional device list) expanded into a ``Topology``.  The
+    plan cache is bypassed so the call stays side-effect free.
+    """
+    warnings.warn(
+        "plan_model(cfg, shape, k=...) is deprecated; build a "
+        "repro.core.Topology and call repro.core.plan.compile instead",
+        DeprecationWarning, stacklevel=2)
+    topology = (Topology.from_devices(devices) if devices is not None
+                else Topology.homogeneous(k, device))
+    return compile_plan(
+        cfg, shape, topology, backend=backend,
+        strategy=PartitionStrategy(
+            strategy=strategy, refine=refine, epsilon_frac=epsilon_frac,
+            gain_mode=gain_mode, seed=seed, cost_mode=cost_mode),
+        cache=False)

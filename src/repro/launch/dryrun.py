@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs
+from repro.core import Topology, compile_plan
 from repro.core.placement import ShardingRules
 from repro.launch import specs as S
 from repro.launch.mesh import make_production_mesh
@@ -141,6 +142,13 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, out_dir=None,
 
     mesh = make_production_mesh(multi_pod=(mesh_name == "multipod"))
     chips = mesh.devices.size
+    # the compiler pass for this cell: one CompiledPlan artifact per
+    # (arch x shape x mesh topology), fetched from the on-disk plan cache
+    # when a previous dry-run already compiled it
+    plan = compile_plan(cfg, shape, Topology.homogeneous(chips))
+    print(f"[plan] {arch} x {shape_name} x {mesh_name}: "
+          f"t_step={plan.step_time * 1e3:.2f}ms key={plan.key}"
+          + (" (plan-cache hit)" if plan.from_cache else ""))
     # roofline table is single-pod only (per brief): the expensive unrolled
     # counting compile is skipped on the multipod mesh (lower+compile proof
     # still runs there in production/rolled form).
@@ -179,7 +187,9 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, out_dir=None,
     # use the unrolled compile's cost_analysis for flops/bytes/collectives.
     row = roof.row()
     row.update(status="ok", compile_s=dt, fits_hbm=bool(fits),
-               live_bytes=int(live))
+               live_bytes=int(live), plan_key=plan.key,
+               plan_step_ms=plan.step_time * 1e3,
+               plan_cache_hit=bool(plan.from_cache))
     ca = compiled.cost_analysis()
     print(f"     cost_analysis: flops/dev={row['hlo_flops_total']/chips:.3e} "
           f"bytes/dev={row['bytes_per_dev']:.3e}")

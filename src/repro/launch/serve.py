@@ -22,9 +22,8 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs
-from repro.core import plan_model, run_adaptation
+from repro.core import Topology, adapt_plan, compile_plan
 from repro.models import lm
-from repro.models.config import SHAPES
 from repro.serve import ContinuousEngine, Engine
 
 
@@ -46,12 +45,21 @@ def _static(args, cfg, params, key):
 
 
 def _continuous(args, cfg, params, key):
+    plan = None
+    if args.adapt:
+        # compile (or fetch from the plan cache) the placement for the
+        # decode traffic this launch actually serves: the engine's cache
+        # length x lane count, not a hardcoded registry shape
+        serve_shape = ContinuousEngine.decode_shape_for(args.kv_len,
+                                                        args.batch)
+        plan = compile_plan(cfg, serve_shape, Topology.homogeneous(args.devices))
     eng = ContinuousEngine(cfg, params, kv_len=args.kv_len,
                            n_slots=args.batch,
                            paged=args.paged,
                            bucket_prompts=args.bucket,
                            prefill_chunk=args.chunk_prefill,
-                           dtype=jnp.float32 if args.reduced else jnp.bfloat16)
+                           dtype=jnp.float32 if args.reduced else jnp.bfloat16,
+                           plan=plan)
     # staggered arrivals: request i becomes admissible at step i * stagger
     needs_fe = bool(cfg.frontend or cfg.n_enc_layers)
     for i in range(args.requests):
@@ -90,17 +98,27 @@ def _continuous(args, cfg, params, key):
     print("first request:", results[0])
 
     if args.adapt:
-        plan = plan_model(cfg, SHAPES["decode_32k"], k=args.devices)
+        # the engine's compiled plan models exactly the served decode shape
+        # (engine.decode_shape()); the assistants emit typed PlanDelta
+        # records that CompiledPlan.apply validates and replays
+        assert plan is not None and plan.shape == eng.decode_shape()
         cb = tel.assistant_callback(plan.graph, plan.cost_model)
-        trace = run_adaptation(plan.graph, plan.assignment, plan.cost_model,
-                               interference=tel.device_interference(plan.k),
-                               telemetry=cb)
-        n_migs = sum(len(m) for m in trace.migrations)
-        print(f"[adapt] plan {plan.describe()}")
-        print(f"[adapt] assistants: {n_migs} migrations, step time "
+        adapted, trace = adapt_plan(
+            plan, interference=tel.device_interference(plan.k), telemetry=cb)
+        print(f"[adapt] plan {plan.describe()}"
+              + (" (plan-cache hit)" if plan.from_cache else ""))
+        print(f"[adapt] assistants: {len(trace.deltas)} deltas, step time "
               f"{trace.step_times[0]*1e3:.2f}ms -> "
               f"{trace.step_times[-1]*1e3:.2f}ms "
               f"({trace.improvement:.1%} improvement under serving load)")
+        for d in trace.deltas:
+            print(f"[adapt]   delta cycle={d.cycle} {d.node}: "
+                  f"{d.src} -> {d.dst} ({d.resource}, "
+                  f"gain {d.gain*1e3:+.2f}ms)")
+        if trace.deltas:
+            print(f"[adapt] adapted t_step {adapted.step_time*1e3:.2f}ms "
+                  f"cut {adapted.cut_bytes:.3e}B (trace replayable: "
+                  f"{adapted.assignment == trace.replay(plan.assignment)})")
 
 
 def main(argv=None):

@@ -24,7 +24,7 @@ import numpy as np
 
 from repro import configs
 from repro.checkpoint import CheckpointManager
-from repro.core import plan_model
+from repro.core import Topology, compile_plan
 from repro.core.placement import ShardingRules
 from repro.data import DataConfig, make_pipeline
 from repro.launch.mesh import make_mesh, make_production_mesh
@@ -61,10 +61,14 @@ def main(argv=None):
         cfg = cfg.reduced()
 
     # --- the paper's compiler pass: plan the placement -----------------------
+    # compile() goes through the on-disk plan cache, so re-launching the
+    # same (config x shape x topology) reuses the stored artifact
     shape = ShapeConfig("cli", args.seq, args.batch, "train")
     k = max(args.model_mesh, 1)
-    plan = plan_model(cfg, shape, k=max(k, 2), backend="tensor")
-    print(f"[plan] {plan.describe()}")
+    plan = compile_plan(cfg, shape, Topology.homogeneous(max(k, 2)),
+                        backend="tensor")
+    print(f"[plan] {plan.describe()}"
+          + (" (plan-cache hit)" if plan.from_cache else ""))
 
     if args.multi_pod:
         mesh = make_production_mesh(multi_pod=True)

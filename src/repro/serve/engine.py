@@ -61,7 +61,7 @@ import numpy as np
 from jax import lax
 
 from repro.models import lm
-from repro.models.config import ModelConfig
+from repro.models.config import ModelConfig, ShapeConfig
 from repro.runtime.telemetry import ServeTelemetry
 
 from .cache import BlockAllocator, CacheConfig, CacheLayout, PagedKVStore
@@ -273,8 +273,8 @@ class ContinuousEngine:
 
     cfg: ModelConfig
     params: dict
-    kv_len: int
-    n_slots: int = 4
+    kv_len: int = 0
+    n_slots: Optional[int] = None
     dtype: object = jnp.float32
     impl: str = "chunked"
     block_size: int = 16
@@ -282,12 +282,47 @@ class ContinuousEngine:
     bucket_prompts: bool = False
     prefill_chunk: int = 0
     telemetry: Optional[ServeTelemetry] = None
+    # optional compiled-plan artifact (repro.core.plan.CompiledPlan): sizes
+    # the cache length and lane count from the planned decode shape instead
+    # of re-deriving them, and gives --adapt the plan it should rebalance
+    plan: Optional[object] = field(default=None, repr=False)
     _next_rid: int = field(default=0, repr=False)
 
     def __post_init__(self):
         reason = lm.serve_unsupported_reason(self.cfg)
         if reason is not None:
             raise NotImplementedError(f"{self.cfg.name}: {reason}")
+        if self.plan is not None:
+            # full-config equality, not name equality: cfg.reduced() keeps
+            # the name, and a plan for the full model must not size (or
+            # later adapt) an engine serving the reduced one
+            if self.plan.cfg != self.cfg:
+                raise ValueError(
+                    f"plan was compiled for {self.plan.cfg.name!r} "
+                    f"(dims differ or different arch), engine serves "
+                    f"{self.cfg.name!r}")
+            pshape = self.plan.shape
+            # explicit sizing must AGREE with the plan, never contradict
+            # it: the attached plan is what --adapt rebalances, so a
+            # mismatch would adapt the wrong placement problem
+            if self.kv_len > 0 and self.kv_len != int(pshape.seq_len):
+                raise ValueError(
+                    f"plan models seq_len={pshape.seq_len} but "
+                    f"kv_len={self.kv_len} was passed; drop kv_len= or "
+                    "compile the plan for the served decode shape")
+            if (self.n_slots is not None
+                    and self.n_slots != int(pshape.global_batch)):
+                raise ValueError(
+                    f"plan models global_batch={pshape.global_batch} but "
+                    f"n_slots={self.n_slots} was passed; drop n_slots= or "
+                    "compile the plan for the served decode shape")
+            self.kv_len = int(pshape.seq_len)
+            self.n_slots = int(pshape.global_batch)
+        if self.n_slots is None:
+            self.n_slots = 4
+        if self.kv_len <= 0:
+            raise ValueError("kv_len must be positive (set it directly or "
+                             "pass a CompiledPlan via plan=)")
         if self.prefill_chunk and not self.paged:
             raise ValueError("prefill_chunk requires paged=True (chunks are "
                              "written straight into the page pools)")
@@ -365,6 +400,21 @@ class ContinuousEngine:
             self._insert = jax.jit(admit_update)
             self._caches = lm.init_slot_caches(self.cfg, self.n_slots,
                                                self._kv_total, self.dtype)
+
+    @staticmethod
+    def decode_shape_for(kv_len: int, n_slots: int) -> ShapeConfig:
+        """The planning shape for a serving configuration — the single
+        constructor every call site (launcher, benchmarks, the engine
+        itself) must share so compiled plans key identically."""
+        return ShapeConfig(f"serve_decode_{kv_len}", kv_len, n_slots,
+                           "decode")
+
+    def decode_shape(self) -> ShapeConfig:
+        """The decode traffic this engine actually serves — max sequence
+        length (cache capacity) x lane count.  This is the shape adaptation
+        should plan for (``launch/serve.py --adapt`` compiles against it
+        instead of a hardcoded registry shape)."""
+        return self.decode_shape_for(self.kv_len, self.n_slots)
 
     def _window_cap_blocks(self) -> int:
         """Most blocks one lane's window ring can pin simultaneously:

@@ -1,0 +1,464 @@
+"""Plan-centric compiler API: ``Topology``, serializable ``CompiledPlan``
+artifacts, the on-disk plan cache, and the typed ``PlanDelta`` adaptation
+protocol (ISSUE 5)."""
+
+import dataclasses
+import json
+
+import pytest
+
+from repro.configs import ARCH_IDS, get
+from repro.core import (AdaptationTrace, AssistantConfig, CompiledPlan,
+                        PartitionStrategy, PlanCache, PlanDelta,
+                        PlanDeltaError, PlanError, Topology, adapt_plan,
+                        compile_plan, plan_key, run_adaptation)
+from repro.models.config import SHAPES, ShapeConfig
+
+K = 4
+SHAPE = SHAPES["train_4k"]
+
+
+def _plan(arch="tinyllama-1.1b", k=K, shape=SHAPE, **kw):
+    return compile_plan(get(arch), shape, Topology.homogeneous(k),
+                        cache=False, **kw)
+
+
+# =============================================================================
+# Topology
+# =============================================================================
+
+def test_topology_constructors_and_json_roundtrip():
+    topo = Topology.homogeneous(4)
+    assert topo.k == len(topo) == 4
+    assert topo.is_homogeneous()
+    clone = Topology.from_json(json.loads(json.dumps(topo.to_json())))
+    assert clone == topo
+    assert clone.fingerprint() == topo.fingerprint()
+
+    het = Topology.heterogeneous([0.5, 1.0, 1.0])
+    assert not het.is_homogeneous()
+    assert het.devices[0].eff_flops == pytest.approx(
+        0.5 * het.devices[1].eff_flops)
+    assert het.fingerprint() != topo.fingerprint()
+
+
+def test_topology_bandwidth_matrix():
+    topo = Topology.homogeneous(3)
+    assert topo.link_bw(0, 1) == topo.devices[0].link_bw
+    assert topo.link_bw(0, 0) == 0.0
+    # an asymmetric fabric survives the JSON round trip
+    bw = [[0.0, 1e9, 2e9], [1e9, 0.0, 4e9], [2e9, 4e9, 0.0]]
+    custom = Topology.from_devices(topo.devices, bw)
+    clone = Topology.from_json(custom.to_json())
+    assert clone.link_bw(1, 2) == 4e9
+    assert clone.fingerprint() != topo.fingerprint()
+
+
+def test_topology_rejects_bad_matrix():
+    topo = Topology.homogeneous(2)
+    with pytest.raises(ValueError):
+        Topology.from_devices(topo.devices, [[0.0]])
+    with pytest.raises(ValueError):
+        Topology(devices=())
+
+
+def test_uniform_fabric_is_implicit():
+    """Homogeneous topologies keep the O(k^2) matrix implicit: the JSON
+    stores null, and link_bw derives the uniform fabric on the fly."""
+    topo = Topology.homogeneous(64)
+    assert topo.bandwidth is None
+    assert topo.to_json()["bandwidth"] is None
+    assert Topology.from_json(topo.to_json()) == topo
+    assert topo.link_bw(3, 42) == topo.devices[0].link_bw
+
+
+def test_zero_bandwidth_link_prices_as_unreachable():
+    """A 0.0 off-diagonal entry means *no link*: crossing it must cost
+    infinity, never zero (a free cut would attract the partitioner and
+    the assistants to a nonexistent wire)."""
+    from repro.core import CostModel, Graph, Node, modeled_step_time
+
+    base = Topology.homogeneous(2)
+    disconnected = Topology.from_devices(base.devices, [[0.0, 0.0],
+                                                        [0.0, 0.0]])
+    cm = CostModel(disconnected)
+    assert cm.link_cost(1024.0, 0, 1) == float("inf")
+    assert cm.link_cost(0.0, 0, 1) == 0.0
+    g = Graph()
+    g.add_node(Node(id="a", kind="op", flops=1e9, bytes_accessed=1e3))
+    g.add_node(Node(id="b", kind="op", flops=1e9, bytes_accessed=1e3))
+    g.add_edge("a", "b", bytes=1e6)
+    assert modeled_step_time(g, {"a": 0, "b": 1}, cm) == float("inf")
+
+
+# =============================================================================
+# CompiledPlan artifacts: round trip + keys
+# =============================================================================
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_artifact_roundtrip_full_registry(arch):
+    """to_json -> from_json is bit-identical for every registry arch:
+    same assignment, same stage maps, same recomputed cost summaries."""
+    plan = _plan(arch)
+    doc = json.loads(json.dumps(plan.to_json()))  # through real JSON text
+    clone = CompiledPlan.from_json(doc, verify=True)
+    assert clone.assignment == plan.assignment
+    assert clone.layer_to_stage == plan.layer_to_stage
+    assert clone.enc_layer_to_stage == plan.enc_layer_to_stage
+    assert clone.key == plan.key
+    # cost summaries recomputed on load, bit-identical to the original
+    assert clone.step_time == plan.step_time
+    assert clone.cut_bytes == plan.cut_bytes
+    assert clone.balance()["imbalance"] == plan.balance()["imbalance"]
+
+
+def test_plan_key_sensitivity():
+    cfg, shape = get("tinyllama-1.1b"), SHAPE
+    base = plan_key(cfg, shape, Topology.homogeneous(4))
+    assert base == plan_key(cfg, shape, Topology.homogeneous(4))
+    assert base != plan_key(cfg, shape, Topology.homogeneous(8))
+    assert base != plan_key(cfg, SHAPES["decode_32k"], Topology.homogeneous(4))
+    assert base != plan_key(cfg, shape, Topology.homogeneous(4), "pipeline")
+    assert base != plan_key(cfg, shape, Topology.homogeneous(4),
+                            strategy=PartitionStrategy(seed=7))
+    assert base != plan_key(cfg.reduced(), shape, Topology.homogeneous(4))
+
+
+def test_from_json_rejects_wrong_version_and_stale_summary():
+    plan = _plan()
+    doc = plan.to_json()
+    bad = dict(doc, version=999)
+    with pytest.raises(PlanError):
+        CompiledPlan.from_json(bad)
+    doc["summary"]["step_time_s"] *= 2.0  # hand-edited artifact
+    with pytest.raises(PlanError):
+        CompiledPlan.from_json(doc, verify=True)
+    # a truncated assignment fails loudly at load, not later with KeyError
+    doc2 = plan.to_json()
+    doc2["assignment"].pop(next(iter(doc2["assignment"])))
+    with pytest.raises(PlanError, match="missing"):
+        CompiledPlan.from_json(doc2)
+
+
+def test_graphless_plan_fails_loudly():
+    """Regression for the legacy ``Plan.graph = None`` default: the fields
+    are honestly Optional now, and every cost accessor raises."""
+    plan = _plan()
+    bare = dataclasses.replace(plan, graph=None, cost_model=None)
+    for access in (lambda: bare.step_time, lambda: bare.cut_bytes,
+                   lambda: bare.balance(), lambda: bare.describe(),
+                   lambda: bare.to_json()):
+        with pytest.raises(PlanError, match="no attached graph"):
+            access()
+    # the structural parts stay usable without a graph
+    assert bare.k == K
+    assert bare.stage_boundaries()[0] == 0
+
+
+# =============================================================================
+# Plan cache
+# =============================================================================
+
+def test_plan_cache_hit_miss_across_registry(tmp_path):
+    cache = PlanCache(tmp_path)
+    shape = SHAPES["decode_32k"]
+    topo = Topology.homogeneous(2)
+    plans = {}
+    for arch in ARCH_IDS:
+        p = compile_plan(get(arch), shape, topo, cache=cache)
+        assert not p.from_cache
+        plans[arch] = p
+    assert cache.hits == 0 and cache.misses == len(ARCH_IDS)
+    assert len(cache) == len(ARCH_IDS)
+    for arch in ARCH_IDS:
+        p = compile_plan(get(arch), shape, topo, cache=cache)
+        assert p.from_cache
+        assert p.assignment == plans[arch].assignment
+        assert p.step_time == plans[arch].step_time
+        assert p.key == plans[arch].key
+    assert cache.hits == len(ARCH_IDS)
+    # a different topology is a different compilation problem: miss
+    p8 = compile_plan(get("tinyllama-1.1b"), shape,
+                      Topology.homogeneous(8), cache=cache)
+    assert not p8.from_cache
+
+
+def test_unusable_default_cache_degrades_to_uncached(tmp_path, monkeypatch):
+    """Default caching is best-effort: a cache path colliding with a file
+    must not fail the compile, just skip the cache."""
+    blocker = tmp_path / "afile"
+    blocker.write_text("not a directory")
+    monkeypatch.setenv("REPRO_PLAN_CACHE", str(blocker / "cache"))
+    plan = compile_plan(get("paper-mlp"), SHAPE, Topology.homogeneous(2))
+    assert not plan.from_cache
+    assert plan.assignment
+
+
+def test_no_link_pairs_are_never_migrated_onto():
+    """On a partially connected fabric (0-bandwidth = no link), neither
+    the assistants nor CompiledPlan.apply may cut an edge across a
+    missing link — modeled step time must stay finite."""
+    import math
+    base = Topology.homogeneous(4)
+    # chain fabric: only adjacent devices are linked
+    bw = [[0.0] * 4 for _ in range(4)]
+    for i in range(3):
+        bw[i][i + 1] = bw[i + 1][i] = base.devices[0].link_bw
+    chain = Topology.from_devices(base.devices, bw)
+    plan = compile_plan(get("tinyllama-1.1b"), SHAPE, chain, cache=False,
+                        strategy=PartitionStrategy(refine=False))
+    adapted, trace = adapt_plan(
+        plan, interference=[{"compute": 3.0}, {}, {}, {}],
+        config=AssistantConfig(theta=0.9, gamma=0.6))
+    assert all(math.isfinite(t) for t in trace.step_times)
+    assert all(math.isfinite(d.gain) for d in trace.deltas)
+    assert math.isfinite(adapted.step_time)
+    # a hand-written delta across a missing link is rejected loudly
+    nid = next(n for n in plan.graph.relocatable_ids()
+               if plan.assignment[n] == 0
+               and any(e.weight and plan.assignment[e.src] == 0
+                       for e in plan.graph.in_edges(n)))
+    with pytest.raises(PlanDeltaError, match="no fabric link"):
+        plan.apply(PlanDelta(nid, 0, 3))
+
+
+def test_offer_survives_link_infeasible_acquirer():
+    """An out-box offer that the first underloaded device cannot take
+    (no fabric link) must stay in the box for a linked acquirer — not be
+    consumed and lost."""
+    from repro.core import (CostModel, Graph, Node, SchedulingAssistants,
+                            simulate_utilization)
+    base = Topology.homogeneous(3)
+    lbw = base.devices[0].link_bw
+    # device 2 is linked to 1 only; device 0 (iterated first) is unreachable
+    bw = [[0.0, lbw, 0.0], [lbw, 0.0, lbw], [0.0, lbw, 0.0]]
+    topo = Topology.from_devices(base.devices, bw)
+    cm = CostModel(topo)
+    g = Graph()
+    for i in range(6):
+        g.add_node(Node(id=f"n{i}", kind="op", flops=1e12,
+                        bytes_accessed=1e3))
+    for i in range(5):
+        g.add_edge(f"n{i}", f"n{i + 1}", bytes=8.0)
+    cm.tag_nodes(g)
+    a = {f"n{i}": 2 for i in range(6)}  # device 2 overloaded, 0 and 1 idle
+    assistants = SchedulingAssistants(g, cm)
+    migs = assistants.step(a, simulate_utilization(g, a, cm))
+    assert migs, "the linked device should have acquired the offer"
+    assert all(m.src == 2 and m.dst == 1 for m in migs)
+
+
+def test_plan_cache_survives_corruption(tmp_path):
+    cache = PlanCache(tmp_path)
+    plan = compile_plan(get("tinyllama-1.1b"), SHAPE,
+                        Topology.homogeneous(2), cache=cache)
+    path = cache.path_for(plan.key)
+    assert path.exists()
+    path.write_text("{not json")
+    again = compile_plan(get("tinyllama-1.1b"), SHAPE,
+                         Topology.homogeneous(2), cache=cache)
+    assert not again.from_cache           # corrupt entry treated as a miss
+    assert again.assignment == plan.assignment
+    # ... and the recompile healed the cache entry
+    healed = compile_plan(get("tinyllama-1.1b"), SHAPE,
+                          Topology.homogeneous(2), cache=cache)
+    assert healed.from_cache
+
+
+# =============================================================================
+# PlanDelta apply / reject
+# =============================================================================
+
+def _relocatable(plan):
+    nid = next(n for n in plan.graph.relocatable_ids()
+               if plan.assignment[n] == 0)
+    return nid
+
+
+def test_apply_valid_delta_is_copy_on_write():
+    plan = _plan()
+    nid = _relocatable(plan)
+    before = dict(plan.assignment)
+    new = plan.apply(PlanDelta(nid, 0, 1, "compute"))
+    assert new is not plan
+    assert new.assignment[nid] == 1
+    assert new.result.assignment == new.assignment   # no divergent copies
+    assert plan.assignment == before          # original untouched
+    assert plan.result.assignment == before
+    assert len(new.layer_to_stage) == plan.cfg.n_layers
+    # stage table stays monotone after the recompute
+    assert all(a <= b for a, b in
+               zip(new.layer_to_stage, new.layer_to_stage[1:]))
+
+
+def test_apply_rejects_invalid_deltas():
+    plan = _plan()
+    nid = _relocatable(plan)
+    before = dict(plan.assignment)
+    pinned = next(n for n, node in plan.graph.nodes.items()
+                  if not node.relocatable)
+    cases = [
+        PlanDelta("no-such-node", 0, 1),                    # unknown node
+        PlanDelta(nid, 3, 1),                               # stale src
+        PlanDelta(nid, 0, K + 5),                           # bad device
+        PlanDelta(nid, 0, 0),                               # no-op move
+        PlanDelta(pinned, plan.assignment[pinned],          # pinned node
+                  (plan.assignment[pinned] + 1) % K),
+    ]
+    for delta in cases:
+        with pytest.raises(PlanDeltaError):
+            plan.apply(delta)
+        assert plan.assignment == before      # transactional: no mutation
+
+
+def test_apply_enforces_pipeline_convexity():
+    plan = _plan(backend="pipeline")
+    g = plan.graph
+    # find a node whose stage interval is a strict subrange of [0, k-1]
+    for nid in g.relocatable_ids():
+        lo, hi = 0, plan.k - 1
+        for e in g.in_edges(nid):
+            lo = max(lo, plan.assignment[e.src])
+        for e in g.out_edges(nid):
+            hi = min(hi, plan.assignment[e.dst])
+        src = plan.assignment[nid]
+        bad = [d for d in range(plan.k) if (d < lo or d > hi) and d != src]
+        if lo <= hi and bad:
+            delta = PlanDelta(nid, src, bad[0])
+            with pytest.raises(PlanDeltaError, match="convexity"):
+                plan.apply(delta)
+            # the assistants' convexity-free mode still applies it
+            assert plan.apply(delta, check_convex=False) \
+                .assignment[nid] == bad[0]
+            return
+    pytest.skip("no convexity-constrained relocatable node found")
+
+
+def test_apply_balance_envelope():
+    plan = _plan()
+    nid = max((n for n in plan.graph.relocatable_ids()
+               if plan.assignment[n] == 0),
+              key=lambda n: plan.graph.nodes[n].flops)
+    delta = PlanDelta(nid, 0, 1)
+    with pytest.raises(PlanDeltaError, match="balance"):
+        plan.apply(delta, balance_epsilon=1e-9)
+    assert plan.apply(delta, balance_epsilon=1e9).assignment[nid] == 1
+
+
+# =============================================================================
+# Adaptation: typed deltas, replay, legacy equivalence
+# =============================================================================
+
+def test_adaptation_trace_replays_to_legacy_result():
+    """The acceptance criterion: run_adaptation's PlanDelta trace, replayed
+    through CompiledPlan.apply, lands on the same assignment as the legacy
+    in-place protocol."""
+    plan = _plan(k=8, strategy=PartitionStrategy(refine=False))
+    interference = [{"compute": 2.5}] + [{}] * 7
+    legacy = run_adaptation(plan.graph, dict(plan.assignment),
+                            plan.cost_model, interference=interference,
+                            config=AssistantConfig(theta=0.9, gamma=0.6))
+    adapted, trace = adapt_plan(plan, interference=interference,
+                                config=AssistantConfig(theta=0.9, gamma=0.6))
+    assert [d.to_json() for d in trace.deltas] == \
+        [d.to_json() for d in legacy.deltas]
+    assert trace.deltas, "interference on device 0 should trigger deltas"
+    # replay through the validated protocol == the in-place legacy result
+    legacy_final = legacy.replay(plan.assignment)
+    assert adapted.assignment == legacy_final
+    # under the interference it adapted to, the plan got no slower
+    assert trace.step_times[-1] <= trace.step_times[0] * 1.001
+
+
+def test_run_adaptation_does_not_mutate_caller_assignment():
+    plan = _plan(k=4, strategy=PartitionStrategy(refine=False))
+    a0 = dict(plan.assignment)
+    snapshot = dict(a0)
+    run_adaptation(plan.graph, a0, plan.cost_model,
+                   interference=[{"compute": 3.0}, {}, {}, {}])
+    assert a0 == snapshot
+
+
+def test_delta_gains_telescope_to_total_improvement():
+    plan = _plan(k=8, strategy=PartitionStrategy(refine=False))
+    interference = [{"compute": 2.5}] + [{}] * 7
+    _, trace = adapt_plan(plan, interference=interference,
+                          config=AssistantConfig(theta=0.9, gamma=0.6))
+    total = trace.step_times[0] - trace.step_times[-1]
+    assert sum(d.gain for d in trace.deltas) == pytest.approx(total)
+
+
+def test_trace_json_roundtrip_and_stale_replay():
+    plan = _plan(k=8, strategy=PartitionStrategy(refine=False))
+    _, trace = adapt_plan(plan, interference=[{"compute": 2.5}] + [{}] * 7,
+                          config=AssistantConfig(theta=0.9, gamma=0.6))
+    clone = AdaptationTrace.from_json(json.loads(json.dumps(trace.to_json())))
+    assert clone.replay(plan.assignment) == trace.replay(plan.assignment)
+    if trace.deltas:
+        wrong = {n: (d + 1) % plan.k for n, d in plan.assignment.items()}
+        with pytest.raises(ValueError, match="stale"):
+            trace.replay(wrong)
+
+
+# =============================================================================
+# Deprecated surface + CLI
+# =============================================================================
+
+def test_plan_model_shim_warns_and_matches_compile():
+    from repro.core import plan_model
+    with pytest.warns(DeprecationWarning):
+        legacy = plan_model(get("tinyllama-1.1b"), SHAPE, k=K)
+    fresh = _plan()
+    assert isinstance(legacy, CompiledPlan)
+    assert legacy.assignment == fresh.assignment
+    assert legacy.k == fresh.k
+    assert legacy.step_time == fresh.step_time
+
+
+def test_plan_cli_compile_save_diff(tmp_path, capsys):
+    from repro.launch.plan import main
+    a = tmp_path / "a.json"
+    argv = ["--arch", "paper-mlp", "--shape", "train_4k", "--devices", "2",
+            "--no-cache", "--save", str(a)]
+    main(argv)
+    out = capsys.readouterr().out
+    assert "CompiledPlan[paper-mlp" in out and "saved" in out
+    loaded = CompiledPlan.load(a)
+    assert loaded.k == 2
+    with pytest.raises(SystemExit) as exc:
+        main(["--diff", str(a), str(a)])
+    assert exc.value.code == 0
+    assert "moved=0" in capsys.readouterr().out
+
+
+def test_engine_sizes_from_plan():
+    import jax
+    import jax.numpy as jnp
+    from repro.models import lm
+    from repro.serve import ContinuousEngine
+
+    cfg = get("paper-mlp").reduced()
+    shape = ShapeConfig("serve_decode_32", 32, 2, "decode")
+    plan = compile_plan(cfg, shape, Topology.homogeneous(2), cache=False)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    eng = ContinuousEngine(cfg, params, plan=plan)
+    assert eng.kv_len == 32 and eng.n_slots == 2
+    assert eng.decode_shape() == shape
+    # explicit sizing that AGREES with the plan is fine
+    agree = ContinuousEngine(cfg, params, kv_len=32, n_slots=2, plan=plan)
+    assert agree.kv_len == 32
+    other = get("tinyllama-1.1b").reduced()
+    with pytest.raises(ValueError, match="compiled for"):
+        ContinuousEngine(other, params, plan=plan)
+    # full vs reduced config share a name but are different models
+    full_plan = compile_plan(get("paper-mlp"), shape,
+                             Topology.homogeneous(2), cache=False)
+    with pytest.raises(ValueError, match="dims differ"):
+        ContinuousEngine(cfg, params, plan=full_plan)
+    with pytest.raises(ValueError, match="kv_len"):
+        ContinuousEngine(cfg, params)
+    # ... but sizing that CONTRADICTS the attached plan is rejected
+    with pytest.raises(ValueError, match="seq_len"):
+        ContinuousEngine(cfg, params, kv_len=64, plan=plan)
+    with pytest.raises(ValueError, match="global_batch"):
+        ContinuousEngine(cfg, params, n_slots=4, plan=plan)
