@@ -16,6 +16,13 @@ physical paged regimes — same tokens by construction — and reports per-step
 decode latency plus physical residency.  ``run_bucketed`` replays a
 mixed-prompt-length trace with and without power-of-two prefill bucketing
 and reports the prefill compile counts (the quantity bucketing bounds).
+``run_prefix`` replays a Zipf-distributed shared-prefix family workload
+(requests share a long system-prompt-style prefix) with the prefix cache
+off and on — identical tokens asserted — and reports prefix hit rate and
+the admission→first-token step count the cache shortens.
+
+The smoke rows are committed in-repo as ``BENCH_serve.json``;
+``tools/bench_diff.py`` diffs a fresh smoke run against it in CI.
 
     PYTHONPATH=src python -m benchmarks.serve_throughput            # full
     PYTHONPATH=src python -m benchmarks.serve_throughput --smoke    # CI
@@ -160,6 +167,7 @@ def _run_continuous(cfg, params, prompts, budgets, kv_len, n_slots,
                frontend_emb=fes[0])                          # compile warmup
     eng.run()
     eng.telemetry.reset()
+    eng.allocator.drop_cached()    # warmup must not pre-seed the prefix cache
     base = eng.now
     for i, p in enumerate(prompts):
         eng.submit(p, max_new_tokens=budgets[i], rid=i,
@@ -173,6 +181,11 @@ def _run_continuous(cfg, params, prompts, budgets, kv_len, n_slots,
                     if not s.prefills and not s.prefill_chunks]
     step_ms = (sum(decode_steps) / max(1, len(decode_steps))) * 1e3
     eng.allocator.check_no_leaks()
+    # admission -> first-token latency in engine steps (deterministic,
+    # unlike wall time): arrival to the step that emitted the prefill token
+    fts = [a.first_token_step - a.request.arrival
+           for a in eng.scheduler.finished
+           if a.request.rid != "warmup" and a.first_token_step is not None]
     return {"name": name, "results": results,
             "us_per_call": wall * 1e6 / max(1, total),
             "tok_per_sec": total / max(wall, 1e-9),
@@ -180,7 +193,10 @@ def _run_continuous(cfg, params, prompts, budgets, kv_len, n_slots,
             "prefill_compiles": eng.prefill_compiles(),
             "peak_resident_kib": tel.peak_resident_bytes() / 1024,
             "occupancy": tel.occupancy(),
-            "cache_pressure": tel.peak_cache_pressure()}
+            "cache_pressure": tel.peak_cache_pressure(),
+            "first_token_steps": sum(fts) / max(1, len(fts)),
+            "prefix_hit_rate": tel.prefix_hit_rate(),
+            "preemptions": tel.total_preemptions()}
 
 
 def run_paged(arch: str = "tinyllama-1.1b", n_requests: int = 8,
@@ -233,6 +249,51 @@ def run_bucketed(arch: str = "tinyllama-1.1b", n_requests: int = 10,
     assert plain.pop("results") == bucketed.pop("results"), \
         "bucketed prefill diverged from unbucketed tokens"
     return [plain, bucketed]
+
+
+def run_prefix(arch: str = "tinyllama-1.1b", n_requests: int = 10,
+               n_slots: int = 4, stagger: int = 1, kv_len: int = 128,
+               shared_len: int = 48, tail_len: int = 8, n_families: int = 3,
+               chunk: int = 16) -> list[dict]:
+    """Prefix cache off vs on under a Zipf shared-prefix workload.
+
+    Requests draw one of ``n_families`` system-prompt-style prefixes with
+    Zipf(1) popularity (rank r picked proportionally to 1/(r+1)) and
+    append a private tail.  Both runs use chunked prefill, where a cache
+    hit skips the cached positions in *compute*: the cache-on run must
+    emit identical tokens with fewer prefill chunks — lower admission ->
+    first-token latency (asserted: it is measured in deterministic engine
+    steps) and higher wall-clock tokens/s.
+    """
+    cfg = get(arch).reduced()
+    key = jax.random.PRNGKey(2)
+    params = lm.init_params(cfg, key, jnp.float32)
+    import numpy as np
+    weights = np.array([1.0 / (r + 1) for r in range(n_families)])
+    rng = np.random.default_rng(0)
+    fams = [jax.random.randint(jax.random.fold_in(key, 500 + f),
+                               (shared_len,), 0, cfg.vocab_size)
+            for f in range(n_families)]
+    prompts = []
+    for i in range(n_requests):
+        f = rng.choice(n_families, p=weights / weights.sum())
+        tail = jax.random.randint(jax.random.fold_in(key, i), (tail_len,),
+                                  0, cfg.vocab_size)
+        prompts.append(jnp.concatenate([fams[f], tail]))
+    budgets = [6] * n_requests
+
+    off = _run_continuous(cfg, params, prompts, budgets, kv_len, n_slots,
+                          stagger, f"serve_prefix_off_{arch}",
+                          paged=True, prefill_chunk=chunk)
+    on = _run_continuous(cfg, params, prompts, budgets, kv_len, n_slots,
+                         stagger, f"serve_prefix_on_{arch}",
+                         paged=True, prefill_chunk=chunk, prefix_cache=True)
+    assert off.pop("results") == on.pop("results"), \
+        "prefix cache changed emitted tokens"
+    assert on["prefix_hit_rate"] > 0, "workload produced no cache hits"
+    assert on["first_token_steps"] <= off["first_token_steps"], \
+        "cache hits should not lengthen the prefill step count"
+    return [off, on]
 
 
 def _print_rows(rows: list[dict]) -> None:
@@ -291,6 +352,10 @@ def main(argv=None) -> None:
         emit(run_paged("phi-3-vision-4.2b", n_requests=2, n_slots=2,
                        kv_len=40))
         emit(run_bucketed("paper-mlp", n_requests=4, n_slots=2, kv_len=48))
+        # shared-prefix workload, cache off vs on (token identity + the
+        # compute-skip effect are asserted inside run_prefix)
+        emit(run_prefix("paper-mlp", n_requests=5, n_slots=2, kv_len=64,
+                        shared_len=32, tail_len=4, n_families=2, chunk=16))
         if args.json:
             _write_json(args.json, all_rows)
         return
@@ -301,6 +366,7 @@ def main(argv=None) -> None:
               f"occ={r['occupancy']:.2f}")
     emit(run_paged())
     emit(run_bucketed())
+    emit(run_prefix())
     if args.json:
         _write_json(args.json, all_rows)
 

@@ -58,13 +58,22 @@ def _continuous(args, cfg, params, key):
                            paged=args.paged,
                            bucket_prompts=args.bucket,
                            prefill_chunk=args.chunk_prefill,
+                           prefix_cache=args.prefix_cache,
+                           pricing=args.pricing,
+                           cache_blocks=args.cache_blocks,
                            dtype=jnp.float32 if args.reduced else jnp.bfloat16,
                            plan=plan)
     # staggered arrivals: request i becomes admissible at step i * stagger
     needs_fe = bool(cfg.frontend or cfg.n_enc_layers)
+    shared = jax.random.randint(key, (max(0, args.shared_prefix),), 0,
+                                cfg.vocab_size)
     for i in range(args.requests):
         prompt = jax.random.randint(jax.random.fold_in(key, i),
                                     (args.prompt_len,), 0, cfg.vocab_size)
+        if args.shared_prefix > 0:
+            # every request opens with the same system-prompt-style prefix
+            # — the workload the prefix cache deduplicates
+            prompt = jnp.concatenate([shared, prompt])
         fe = (jax.random.normal(jax.random.fold_in(key, 10_000 + i),
                                 (cfg.frontend_tokens, cfg.frontend_dim),
                                 jnp.float32) if needs_fe else None)
@@ -95,6 +104,18 @@ def _continuous(args, cfg, params, key):
               f"({len(eng.allocator.stores)} layer pools, "
               f"block_size={eng.block_size})"
               + (f" by_group: {per_group}" if per_group else ""))
+    if args.prefix_cache:
+        st = eng.allocator.prefix_stats()
+        print(f"[serve-cb] prefix-cache: hit_rate="
+              f"{tel.prefix_hit_rate():.2f} "
+              f"({st['hit_tokens']}/{st['lookup_tokens']} tokens, "
+              f"{st['hit_admissions']}/{st['admissions']} admissions) "
+              f"commits={st['commits']} evictions={st['evictions']} "
+              f"cow_forks={st['cow_forks']} "
+              f"peak_shared={tel.peak_shared_saved_bytes() / 1024:.0f}KiB")
+    if eng.scheduler.preemptions:
+        print(f"[serve-cb] preemptions={eng.scheduler.preemptions} "
+              f"(lazy-pricing evict-and-requeue)")
     print("first request:", results[0])
 
     if args.adapt:
@@ -148,6 +169,21 @@ def main(argv=None):
     ap.add_argument("--chunk-prefill", type=int, default=0, metavar="C",
                     help="continuous+paged: prefill prompts in C-token "
                          "chunks interleaved with decode")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="continuous+paged: content-addressed prefix-block "
+                         "reuse with copy-on-write (decoder-only "
+                         "global/MLA archs)")
+    ap.add_argument("--shared-prefix", type=int, default=0, metavar="P",
+                    help="continuous: prepend the same P random tokens to "
+                         "every prompt (the workload --prefix-cache "
+                         "deduplicates)")
+    ap.add_argument("--pricing", choices=("worst", "lazy"), default="worst",
+                    help="continuous admission pricing: reserve the full "
+                         "worst case (default) or oversubscribe and "
+                         "preempt-requeue on mid-decode exhaustion")
+    ap.add_argument("--cache-blocks", type=int, default=None, metavar="N",
+                    help="continuous: override the self-sized block pool "
+                         "(undersize it to exercise admission backpressure)")
     ap.add_argument("--adapt", action="store_true",
                     help="feed serve telemetry to the §3 assistants")
     ap.add_argument("--devices", type=int, default=4,

@@ -14,6 +14,7 @@ layers and 512 devices.
 
 from __future__ import annotations
 
+import hashlib
 import math
 from typing import Optional
 
@@ -177,14 +178,75 @@ def serve_groups(cfg: ModelConfig) -> dict[str, tuple[int, ...]]:
     its self-mixer, so its indices repeat the mixer keys'.  A modality
     frontend (VLM) contributes no group of its own — its projected rows
     enter the decoder sequence and their K/V pages through the normal
-    self-attention groups."""
+    self-attention groups.  "sharable" is a second overlay: the layers
+    whose paged blocks are content-addressable for cross-request prefix
+    reuse — the paged layers, but only when the whole arch qualifies
+    (``prefix_sharable_reason`` is None); an arch with any
+    request-private group (window rings, recurrent slabs, cross sets,
+    frontend rows) shares nothing."""
     out: dict[str, list[int]] = {"paged": [], "window": [], "recurrent": []}
     for li, spec in enumerate(cfg.layers()):
         out[_MIXER_GROUP[spec.mixer]].append(li)
     groups = {k: tuple(v) for k, v in out.items()}
     groups["cross"] = (tuple(range(cfg.n_layers)) if cfg.n_enc_layers
                        else ())
+    whole_arch_sharable = (not cfg.n_enc_layers and not cfg.frontend
+                           and not groups["window"]
+                           and not groups["recurrent"])
+    groups["sharable"] = groups["paged"] if whole_arch_sharable else ()
     return groups
+
+
+def prefix_sharable_reason(cfg: ModelConfig) -> Optional[str]:
+    """Why cross-request prefix-cache block sharing is unavailable for
+    this config, or None when it is sound.
+
+    The prefix cache's correctness condition: a cache block's physical
+    content must be a pure function of the token prefix it covers.
+    Causal global attention (and MLA latents) satisfy it — K/V rows at
+    position i depend only on tokens <= i — but any per-request state
+    breaks it, and one unsharable ingredient disqualifies the whole arch
+    (there is no per-layer opt-in: a skipped prefill must be skippable
+    for *every* layer or the prompt still has to be recomputed)."""
+    if cfg.n_enc_layers:
+        return ("enc-dec cross-attention mixes per-request encoder frames "
+                "into every decoder layer, so block content is not a "
+                "function of the token prefix")
+    if cfg.frontend:
+        return ("modality-frontend rows prepend per-request embeddings, so "
+                "every self-attention block depends on the request's "
+                "frontend content, not just its tokens")
+    groups = serve_groups(cfg)
+    if groups["window"]:
+        return ("sliding-window layers keep per-request block rings whose "
+                "entries are freed and recycled in place, never "
+                "content-stable")
+    if groups["recurrent"]:
+        return ("recurrent-state layers carry per-request scan state "
+                "slabs, not content-addressable blocks")
+    return None
+
+
+def prompt_block_hashes(prompt, block_size: int) -> tuple[str, ...]:
+    """Content-addressed hash chain over a prompt's *full* cache blocks.
+
+    Entry i commits to the entire token prefix ``prompt[:(i+1) *
+    block_size]`` via ``h_i = blake2b(h_{i-1} | tokens_i)`` — so equal
+    hashes mean equal prefixes and a chain lookup can stop at the first
+    miss.  Only full blocks are hashed: the partial tail block is always
+    private to its request.  blake2b (not Python's salted ``hash``) keeps
+    the chain stable across processes, so persisted traces and multi-host
+    schedulers agree on block identity."""
+    toks = [int(t) for t in prompt]
+    chain: list[str] = []
+    parent = b""
+    for i in range(len(toks) // block_size):
+        block = toks[i * block_size:(i + 1) * block_size]
+        payload = parent + b"|" + b",".join(b"%d" % t for t in block)
+        h = hashlib.blake2b(payload, digest_size=16).hexdigest()
+        chain.append(h)
+        parent = h.encode()
+    return tuple(chain)
 
 
 def init_paged_caches(cfg: ModelConfig, n_slots: int, n_pages: int,
@@ -377,7 +439,7 @@ def _scatter_rows(pages, row_tbl, cpos, rows, *, block_size: int,
 
 def insert_paged_prompt(cfg: ModelConfig, caches: dict, single: dict,
                         tables: dict, slot, *, block_size: int,
-                        null_block: int) -> dict:
+                        null_block: int, skip_below=0) -> dict:
     """Scatter a dense single-request prefill cache into the paged tree.
 
     ``single`` is the ``init_cache(cfg, 1, kv_len)`` tree a full prefill
@@ -389,7 +451,16 @@ def insert_paged_prompt(cfg: ModelConfig, caches: dict, single: dict,
     null page; cross-attention K/V (enc-dec) lands in the slot's static
     cross block set (``tables["cross"]``) at positions ``0..F-1``;
     ssd/rglru state is inserted into lane ``slot``.  The pools' other
-    lanes are untouched, so admission never perturbs running requests."""
+    lanes are untouched, so admission never perturbs running requests.
+
+    ``skip_below`` (may be traced) suppresses attention/MLA writes below
+    that cache position: on a prefix-cache hit the matched positions are
+    already resident in shared blocks, and writing them again would
+    clobber content other slots read (the table's head entries *are*
+    those shared blocks).  The prefill itself still computes every
+    position — only the writes are masked."""
+    skip_below = jnp.asarray(skip_below, jnp.int32)
+
     def scatter(pages, row_tbl, cpos, rows):
         return _scatter_rows(pages, row_tbl, cpos, rows,
                              block_size=block_size, null_block=null_block)
@@ -399,6 +470,7 @@ def insert_paged_prompt(cfg: ModelConfig, caches: dict, single: dict,
             row = tables["window" if spec.mixer == "local" else "global"]
             leaf, sl = full["attn"], one["attn"]
             cpos = sl["pos"][0]                # identical across repeats
+            cpos = jnp.where(cpos >= skip_below, cpos, -1)
             out = {"attn": {
                 "k_pages": scatter(leaf["k_pages"], row, cpos, sl["k"][:, 0]),
                 "v_pages": scatter(leaf["v_pages"], row, cpos, sl["v"][:, 0]),
@@ -406,6 +478,7 @@ def insert_paged_prompt(cfg: ModelConfig, caches: dict, single: dict,
         elif spec.mixer == "mla":
             leaf, sl = full["mla"], one["mla"]
             cpos = sl["pos"][0]
+            cpos = jnp.where(cpos >= skip_below, cpos, -1)
             out = {"mla": {
                 "ckv_pages": scatter(leaf["ckv_pages"], tables["global"],
                                      cpos, sl["ckv"][:, 0]),
@@ -428,6 +501,29 @@ def insert_paged_prompt(cfg: ModelConfig, caches: dict, single: dict,
         return out
 
     return _map_entries(cfg, walk, caches, single)
+
+
+def copy_paged_block(cfg: ModelConfig, caches: dict, src, dst) -> dict:
+    """Copy one physical page ``src`` -> ``dst`` across every *global*-group
+    pool leaf (attention K/V and MLA latent pools) — the physical half of a
+    prefix-cache copy-on-write fork.  ``src``/``dst`` may be traced, so the
+    engine jits this once.  Window, cross, and recurrent leaves pass
+    through untouched (they are never content-shared)."""
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+
+    def copy(pool):
+        page = lax.dynamic_index_in_dim(pool, src, axis=1, keepdims=False)
+        return lax.dynamic_update_index_in_dim(pool, page, dst, axis=1)
+
+    def walk(spec: LayerSpec, entry: dict) -> dict:
+        if spec.mixer == "global":
+            return {**entry, "attn": jax.tree.map(copy, entry["attn"])}
+        if spec.mixer == "mla":
+            return {**entry, "mla": jax.tree.map(copy, entry["mla"])}
+        return entry
+
+    return _map_entries(cfg, walk, caches)
 
 
 def encode_cross_single(cfg: ModelConfig, params: dict, frontend_emb,

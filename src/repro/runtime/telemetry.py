@@ -73,6 +73,15 @@ class ServeStep:
     # length, which this field lets the assistants (and the invariant
     # tests) observe
     resident_by_group: dict = field(default_factory=dict)
+    # lazy-pricing safety net: slots evicted and requeued this step
+    preemptions: int = 0
+    # prefix cache (sharable layouts): tokens looked up / served from the
+    # cache at admissions this step, plus an instantaneous view of the
+    # pool's sharing state
+    prefix_hit_tokens: int = 0
+    prefix_lookup_tokens: int = 0
+    shared_saved_bytes: int = 0       # bytes deduplicated right now
+    cached_blocks: int = 0            # refcount-0 committed blocks resident
 
 
 @dataclass
@@ -101,6 +110,10 @@ class ServeTelemetry:
         self._max_concurrency = 0
         self._peak_resident_bytes = 0
         self._peak_group_bytes: dict = {}
+        self._total_preemptions = 0
+        self._prefix_hit_tokens = 0
+        self._prefix_lookup_tokens = 0
+        self._peak_shared_saved_bytes = 0
 
     def reset(self) -> None:
         """Drop all recorded steps and whole-run aggregates."""
@@ -111,20 +124,33 @@ class ServeTelemetry:
         self._max_concurrency = 0
         self._peak_resident_bytes = 0
         self._peak_group_bytes = {}
+        self._total_preemptions = 0
+        self._prefix_hit_tokens = 0
+        self._prefix_lookup_tokens = 0
+        self._peak_shared_saved_bytes = 0
 
     def record_step(self, step: int, seconds: float, active_slots,
                     n_slots: int, blocks_in_use: int, n_blocks: int,
                     prefills: int = 0, prefill_chunks: int = 0,
                     new_tokens: int = 0,
                     resident_bytes: int = 0, capacity_bytes: int = 0,
-                    resident_by_group: dict = None) -> None:
+                    resident_by_group: dict = None, preemptions: int = 0,
+                    prefix_hit_tokens: int = 0,
+                    prefix_lookup_tokens: int = 0,
+                    shared_saved_bytes: int = 0,
+                    cached_blocks: int = 0) -> None:
         self.steps.append(ServeStep(
             step=step, seconds=seconds, active_slots=tuple(active_slots),
             n_slots=n_slots, blocks_in_use=blocks_in_use, n_blocks=n_blocks,
             prefills=prefills, prefill_chunks=prefill_chunks,
             new_tokens=new_tokens,
             resident_bytes=resident_bytes, capacity_bytes=capacity_bytes,
-            resident_by_group=dict(resident_by_group or {})))
+            resident_by_group=dict(resident_by_group or {}),
+            preemptions=preemptions,
+            prefix_hit_tokens=prefix_hit_tokens,
+            prefix_lookup_tokens=prefix_lookup_tokens,
+            shared_saved_bytes=shared_saved_bytes,
+            cached_blocks=cached_blocks))
         # chunk work units are not emitted tokens — only completed prefills
         # (one greedy token each) and decode tokens count
         self._total_tokens += new_tokens + prefills
@@ -138,6 +164,11 @@ class ServeTelemetry:
         for group, nbytes in (resident_by_group or {}).items():
             self._peak_group_bytes[group] = max(
                 self._peak_group_bytes.get(group, 0), nbytes)
+        self._total_preemptions += preemptions
+        self._prefix_hit_tokens += prefix_hit_tokens
+        self._prefix_lookup_tokens += prefix_lookup_tokens
+        self._peak_shared_saved_bytes = max(self._peak_shared_saved_bytes,
+                                            shared_saved_bytes)
 
     # -- aggregates -----------------------------------------------------------
     def _recent(self) -> list:
@@ -188,6 +219,22 @@ class ServeTelemetry:
 
     def total_tokens(self) -> int:
         return self._total_tokens
+
+    def total_preemptions(self) -> int:
+        """Whole-run count of lazy-pricing preempt-and-requeue evictions."""
+        return self._total_preemptions
+
+    def prefix_hit_rate(self) -> float:
+        """Fraction of looked-up prompt tokens served from the prefix
+        cache over the whole run (0 when the cache is off or no admission
+        carried a hash chain)."""
+        if not self._prefix_lookup_tokens:
+            return 0.0
+        return self._prefix_hit_tokens / self._prefix_lookup_tokens
+
+    def peak_shared_saved_bytes(self) -> int:
+        """Peak physical bytes deduplicated by prefix-block sharing."""
+        return self._peak_shared_saved_bytes
 
     def tokens_per_sec(self) -> float:
         if self._busy_seconds <= 0:

@@ -1,4 +1,5 @@
-from .cache import BlockAllocator, CacheConfig, CacheLayout, PagedKVStore
+from .cache import (AllocatorInvariantError, BlockAllocator, CacheConfig,
+                    CacheError, CacheExhausted, CacheLayout, PagedKVStore)
 from .engine import (ContinuousEngine, Engine, bucket_length,
                      make_bucketed_prefill_step, make_chunk_prefill_step,
                      make_paged_decode_step, make_prefill_step,

@@ -35,6 +35,31 @@ prepend the decoder sequence, so the layout's ``frontend_extra`` simply
 widens the global/window price of every admission by ``frontend_tokens``
 physical rows.
 
+**Prefix cache** (``CacheLayout.sharable``): global-group blocks are
+*content-addressed* — every full prompt block is identified by a hash
+chain ``h_i = H(h_{i-1}, token_ids_i)`` (``models.lm.prompt_block_hashes``)
+and refcounted.  At admission the allocator matches the longest cached
+chain prefix and hands those physical blocks to the new slot read-only
+(prefill then starts at the first uncached block); when a prefill
+completes, ``commit_slot`` publishes the slot's full prompt blocks into
+the index.  ``free_slot`` decrements refcounts instead of freeing:
+refcount-zero committed blocks park in an LRU *cached* pool that still
+counts as allocatable capacity — ``_claim`` evicts LRU cached blocks
+(and their index entries) only when the free list runs dry, and never a
+block with a live reference.  A write into a shared or indexed block
+must copy-on-write first (``ensure_private``); partial tail blocks are
+always private, so the only CoW site is the recompute of the last
+prompt position on a full-prompt-aligned hit.  Sharability is per
+group: global (and MLA-latent) blocks are sharable; window rings,
+recurrent state slabs, and enc-dec cross sets are not (their content is
+not a pure function of the token prefix).
+
+**Failure taxonomy**: expected capacity backpressure raises
+``CacheExhausted`` (a ``MemoryError`` subclass — schedulers catch it and
+wait or preempt), while contract violations raise
+``AllocatorInvariantError`` (an ``AssertionError`` subclass — a real bug,
+never caught by admission control).
+
 Two layers:
 
 * ``BlockAllocator`` — pure host bookkeeping (free list + per-slot group
@@ -52,8 +77,29 @@ Two layers:
 
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Optional
+
+
+class CacheError(Exception):
+    """Base class for the allocator's typed failures."""
+
+
+class CacheExhausted(CacheError, MemoryError):
+    """Expected capacity backpressure: the pool cannot satisfy this claim
+    right now.  Admission control treats this as "wait for blocks" (break
+    out of the admit loop) and the engine's decode path as "preempt the
+    youngest slot and requeue it" — it is never a bug.  Subclasses
+    ``MemoryError`` so pre-existing ``except MemoryError`` call sites keep
+    working."""
+
+
+class AllocatorInvariantError(CacheError, AssertionError):
+    """A broken allocator invariant (double allocate, double free, shrink,
+    refcount corruption, leaked blocks): a real bug in the caller or the
+    allocator itself.  Deliberately *not* a ``MemoryError`` subclass so the
+    scheduler's break-on-full path can never swallow corruption."""
 
 
 @dataclass(frozen=True)
@@ -89,7 +135,12 @@ class CacheLayout:
     ``cross_tokens``/``cross_cap_blocks`` describe the enc-dec static
     cross block set (allocated whole at admission, never extended);
     ``frontend_extra`` widens every admission's global/window price by the
-    VLM frontend rows that share the decoder cache."""
+    VLM frontend rows that share the decoder cache.  ``sharable`` enables
+    the content-addressed prefix cache over the *global* group only —
+    the engine sets it when every layer's cache content is a pure
+    function of the token prefix (``models.lm.prefix_sharable_reason``
+    is None): window rings, recurrent slabs, and cross sets are never
+    shared, and frontend rows disqualify the whole arch."""
 
     has_global: bool = True
     window: int = 0                  # sliding-window width (0 = no group)
@@ -103,6 +154,8 @@ class CacheLayout:
     frontend_extra: int = 0          # VLM frontend rows resident in the
                                      # decoder cache on top of every
                                      # admission's logical token count
+    sharable: bool = False           # content-addressed prefix reuse over
+                                     # the global group (see class doc)
 
 
 class PagedKVStore:
@@ -195,6 +248,21 @@ class BlockAllocator:
     control and the cache-pressure telemetry see every group.  The
     default layout is global-only (the original regime).
 
+    Every global-table entry is *refcounted* — with a ``sharable`` layout
+    one physical block may back several slots' tables (prefix reuse) and
+    may outlive all of them in the LRU cached pool (see module
+    docstring).  Three block states: **free** (on ``_free``), **cached**
+    (committed content, refcount 0, LRU-evictable — still allocatable
+    capacity), **live** (refcount >= 1).  Capacity failures raise
+    ``CacheExhausted``; caller bugs raise ``AllocatorInvariantError``.
+
+    Admissions may carry a *worst-case reservation*
+    (``reserve_tokens=prompt + max_new``): the outstanding (reserved but
+    not yet claimed) blocks of every live slot are subtracted from what
+    ``can_allocate`` will promise to the next admission, and a slot's own
+    ``extend``s draw down its reservation — so a reserving scheduler can
+    never see a mid-decode ``CacheExhausted``.
+
     Optionally carries attached ``PagedKVStore``s tagged with their group
     (the engine attaches one per pool leaf); the allocator then reports
     physical residency in bytes — per group via ``resident_bytes_by_group``
@@ -219,6 +287,20 @@ class BlockAllocator:
         self._state_slots: set[int] = set()
         self._group_in_use: dict[str, int] = {"global": 0, "window": 0,
                                               "cross": 0}
+        # -- prefix cache / refcount state (global group only) ------------
+        self._ref: dict[int, int] = {}           # live block -> refcount
+        self._hash_of: dict[int, str] = {}       # committed block -> hash
+        self._index: dict[str, int] = {}         # content hash -> block
+        self._cached: OrderedDict[int, int] = OrderedDict()  # LRU ref-0
+        self._tick = 0                           # LRU recency counter
+        self._slot_hashes: dict[int, tuple] = {}  # slot -> prompt chain
+        # slot -> tokens served from the index at admission (engine reads
+        # this to start prefill at the first uncached position)
+        self.matched_tokens: dict[int, int] = {}
+        self._reserve: dict[int, int] = {}       # slot -> reserved blocks
+        self.stats: dict[str, int] = {
+            "admissions": 0, "hit_admissions": 0, "lookup_tokens": 0,
+            "hit_tokens": 0, "commits": 0, "evictions": 0, "cow_forks": 0}
         self.stores: list[PagedKVStore] = []
         self.store_groups: list[str] = []
         if store is not None:
@@ -227,8 +309,9 @@ class BlockAllocator:
     def set_layout(self, layout: CacheLayout) -> None:
         """Install the engine's cache-group layout (before any admission)."""
         if self.tables or self.window_tables or self.cross_tables or \
-                self._state_slots:
-            raise ValueError("cannot change layout with live allocations")
+                self._state_slots or self._cached:
+            raise ValueError("cannot change layout with live allocations "
+                             "or cached prefix blocks")
         self.layout = layout
 
     # -- queries ----------------------------------------------------------------
@@ -238,17 +321,20 @@ class BlockAllocator:
 
     @property
     def n_free(self) -> int:
-        return len(self._free)
+        """Allocatable blocks: truly free plus refcount-0 cached blocks
+        (the prefix cache is reclaimable capacity, not pressure)."""
+        return len(self._free) + len(self._cached)
 
     @property
     def n_in_use(self) -> int:
-        return self.config.n_blocks - len(self._free)
+        return self.config.n_blocks - self.n_free
 
     def pressure(self) -> float:
         """Fraction of the block pool currently allocated, in [0, 1]."""
         return self.n_in_use / self.config.n_blocks if self.config.n_blocks else 0.0
 
-    def blocks_needed(self, n_tokens: int) -> int:
+    def blocks_needed(self, n_tokens: int,
+                      reserve_tokens: Optional[int] = None) -> int:
         """Admission price of ``n_tokens`` logical tokens across block
         groups: global tables grow with the context (plus the layout's
         ``frontend_extra`` physical rows a VLM admission brings along); a
@@ -256,8 +342,9 @@ class BlockAllocator:
         of length; an enc-dec cross block set costs its full static size
         up front — pricing it here is what keeps admission deadlock-free
         (a request can never be admitted without room for its whole
-        cross KV)."""
-        phys = n_tokens + self.layout.frontend_extra
+        cross KV).  ``reserve_tokens`` prices the request's *worst case*
+        (prompt + max_new_tokens) instead of its prefill footprint."""
+        phys = max(n_tokens, reserve_tokens or 0) + self.layout.frontend_extra
         need = 0
         if self.layout.has_global:
             need += self.config.blocks_for(phys)
@@ -268,43 +355,156 @@ class BlockAllocator:
             need += self.layout.cross_cap_blocks
         return need
 
-    def can_allocate(self, n_tokens: int) -> bool:
+    def outstanding_blocks(self) -> int:
+        """Blocks promised to live reserving slots but not yet claimed:
+        the remaining global-table growth of each reservation, plus the
+        window-ring headroom up to the cap for reserving slots."""
+        out = 0
+        for slot, reserved in self._reserve.items():
+            out += max(0, reserved - len(self.tables.get(slot, ())))
+            if self.layout.window and slot in self.window_tables:
+                out += max(0, self.layout.window_cap_blocks
+                           - len(self.window_tables[slot]))
+        return out
+
+    def n_available(self) -> int:
+        """Blocks the next admission may be promised: allocatable minus
+        every live reservation's outstanding growth."""
+        return self.n_free - self.outstanding_blocks()
+
+    def can_allocate(self, n_tokens: int,
+                     reserve_tokens: Optional[int] = None) -> bool:
         if self.layout.state_slots and \
                 len(self._state_slots) >= self.layout.state_slots:
             return False
-        return self.blocks_needed(n_tokens) <= self.n_free
+        return self.blocks_needed(n_tokens, reserve_tokens) \
+            <= self.n_available()
 
     def state_slots_in_use(self) -> int:
         return len(self._state_slots)
 
     # -- lifecycle ---------------------------------------------------------------
     def _claim(self, n: int, what: str) -> list[int]:
-        if n > len(self._free):
-            raise MemoryError(f"need {n} blocks for {what}, "
-                              f"{len(self._free)} free")
-        return [self._free.pop() for _ in range(n)]
+        """Pop ``n`` blocks: the free list first, then LRU eviction of
+        refcount-0 cached blocks (dropping their index entries)."""
+        if n > self.n_free:
+            raise CacheExhausted(
+                f"need {n} blocks for {what}, {self.n_free} allocatable "
+                f"({len(self._free)} free + {len(self._cached)} cached)")
+        got = []
+        for _ in range(max(0, n)):
+            got.append(self._free.pop() if self._free else self._evict_lru())
+        return got
 
-    def allocate(self, slot: int, n_tokens: int) -> list[int]:
+    def _evict_lru(self) -> int:
+        """Evict the least-recently-used cached block from the prefix
+        index.  Children of the evicted block's chain may stay indexed —
+        they become unreachable for matching (a chain lookup stops at the
+        first miss) and age out of the LRU on their own."""
+        block, _ = self._cached.popitem(last=False)
+        if self._ref.get(block):
+            raise AllocatorInvariantError(
+                f"cached block {block} has refcount {self._ref[block]}")
+        h = self._hash_of.pop(block)
+        if self._index.get(h) == block:
+            del self._index[h]
+        self.stats["evictions"] += 1
+        return block
+
+    def _retain(self, block: int) -> None:
+        """Add one live reference to a global-group block (revives it out
+        of the cached pool on the 0 -> 1 transition)."""
+        r = self._ref.get(block, 0)
+        if r == 0:
+            self._cached.pop(block, None)
+            self._group_in_use["global"] += 1
+        self._ref[block] = r + 1
+
+    def _release(self, block: int) -> None:
+        """Drop one live reference; at refcount 0 a committed block parks
+        in the LRU cached pool, an uncommitted one returns to the free
+        list."""
+        r = self._ref.get(block)
+        if r is None:
+            raise AllocatorInvariantError(
+                f"block {block} released with no live reference "
+                "(double free?)")
+        if r > 1:
+            self._ref[block] = r - 1
+            return
+        del self._ref[block]
+        self._group_in_use["global"] -= 1
+        if block in self._hash_of:
+            self._tick += 1
+            self._cached[block] = self._tick
+        else:
+            self._free.append(block)
+
+    def allocate(self, slot: int, n_tokens: int, *,
+                 reserve_tokens: Optional[int] = None,
+                 block_hashes=None) -> list[int]:
         """Claim every group's resources for a newly admitted request
         occupying ``slot``; returns the global block ids (empty when the
         layout has no global layers).  ``n_tokens`` is the request's
         logical count (prompt + first generated token); the per-slot token
         ledger is kept in *physical* rows, i.e. with ``frontend_extra``
         folded in, so the engine's later ``extend`` calls (which pass
-        physical resident rows) line up."""
+        physical resident rows) line up.
+
+        ``reserve_tokens`` (worst-case pricing) records a reservation of
+        ``blocks_for(reserve + frontend_extra)`` global blocks plus the
+        window cap, guaranteeing the slot's own ``extend``s up to that
+        total can never raise ``CacheExhausted``.
+
+        ``block_hashes`` (sharable layouts) is the prompt's content hash
+        chain: the longest indexed prefix is mapped read-only into the
+        head of the slot's table, ``matched_tokens[slot]`` records how
+        many tokens that covers, and only the remaining blocks are
+        claimed fresh.  The prompt always needs at least one block past
+        its full-block chain (for position ``prompt_len`` onward), so the
+        tail is private by construction."""
         if slot in self.tables:
-            raise ValueError(f"slot {slot} already has an allocation")
-        if not self.can_allocate(n_tokens):
-            raise MemoryError(
-                f"need {self.blocks_needed(n_tokens)} blocks for {n_tokens} "
-                f"tokens, {self.n_free} free")
+            raise AllocatorInvariantError(
+                f"slot {slot} already has an allocation")
+        if not self.can_allocate(n_tokens, reserve_tokens):
+            raise CacheExhausted(
+                f"need {self.blocks_needed(n_tokens, reserve_tokens)} blocks "
+                f"for {n_tokens} tokens, {self.n_available()} available "
+                f"({self.n_free} allocatable, "
+                f"{self.outstanding_blocks()} reserved)")
         phys = n_tokens + self.layout.frontend_extra
         need = self.config.blocks_for(phys) if self.layout.has_global else 0
-        self.tables[slot] = self._claim(need, f"slot {slot}")
-        self._group_in_use["global"] += need
+        self.stats["admissions"] += 1
+        table: list[int] = []
+        if block_hashes and self.layout.sharable and self.layout.has_global:
+            for h in block_hashes:
+                block = self._index.get(h)
+                if block is None or len(table) >= need:
+                    break
+                table.append(block)
+            self.stats["lookup_tokens"] += \
+                len(block_hashes) * self.config.block_size
+            self.stats["hit_tokens"] += len(table) * self.config.block_size
+            if table:
+                self.stats["hit_admissions"] += 1
+            for block in table:
+                self._retain(block)
+        matched = len(table)
+        fresh = self._claim(need - matched, f"slot {slot}")
+        for block in fresh:
+            self._retain(block)
+        table.extend(fresh)
+        self.tables[slot] = table
         self._tokens[slot] = phys
+        self.matched_tokens[slot] = matched * self.config.block_size
+        self._slot_hashes[slot] = tuple(block_hashes or ())
+        if reserve_tokens is not None and self.layout.has_global:
+            self._reserve[slot] = self.config.blocks_for(
+                reserve_tokens + self.layout.frontend_extra)
         if self.layout.window:
             self._allocate_window(slot, phys)
+            if reserve_tokens is not None:
+                self._reserve.setdefault(slot, 0)
         if self.layout.cross_tokens:
             cross = self._claim(self.layout.cross_cap_blocks,
                                 f"slot {slot} cross block set")
@@ -335,22 +535,31 @@ class BlockAllocator:
         tokens.
 
         Returns the newly claimed block ids (usually empty — a new block is
-        only needed every ``block_size`` decode steps).
-        """
+        only needed every ``block_size`` decode steps).  Growth within the
+        slot's own reservation always succeeds; growth beyond it (lazy
+        pricing) must fit in the unreserved headroom, else
+        ``CacheExhausted`` — the engine's cue to preempt a slot."""
         if slot not in self.tables:
-            raise KeyError(f"slot {slot} has no allocation")
+            raise AllocatorInvariantError(f"slot {slot} has no allocation")
         if n_tokens_total < self._tokens[slot]:
-            raise ValueError(
+            raise AllocatorInvariantError(
                 f"slot {slot}: cannot shrink {self._tokens[slot]} -> {n_tokens_total}")
         need = self.config.blocks_for(n_tokens_total) - len(self.tables[slot])
         if not self.layout.has_global:
             need = 0
-        if need > self.n_free:
-            raise MemoryError(
-                f"slot {slot}: need {need} more blocks, {self.n_free} free")
+        if need > 0:
+            own = max(0, self._reserve.get(slot, 0) - len(self.tables[slot]))
+            extra = max(0, need - own)
+            if extra > self.n_available():
+                raise CacheExhausted(
+                    f"slot {slot}: needs {need} more blocks ({extra} beyond "
+                    f"its reservation), {self.n_available()} available "
+                    f"({self.n_free} allocatable, "
+                    f"{self.outstanding_blocks()} reserved)")
         fresh = self._claim(max(0, need), f"slot {slot}")
+        for block in fresh:
+            self._retain(block)
         self.tables[slot].extend(fresh)
-        self._group_in_use["global"] += len(fresh)
         self._tokens[slot] = n_tokens_total
         return fresh
 
@@ -365,7 +574,7 @@ class BlockAllocator:
         ``(fresh, freed)`` physical block id lists; a non-empty either means
         the published table row must be rebuilt."""
         if slot not in self.window_tables:
-            raise KeyError(f"slot {slot} has no window ring")
+            raise AllocatorInvariantError(f"slot {slot} has no window ring")
         bs, W = self.config.block_size, self.layout.window
         ring = self.window_tables[slot]
         p = n_tokens_total - 1
@@ -376,7 +585,16 @@ class BlockAllocator:
         self._group_in_use["window"] -= len(freed)
         hi = p // bs
         cur_hi = max(ring, default=lo - 1)
-        fresh = self._claim(max(0, hi - cur_hi), f"slot {slot} window ring")
+        n_claim = max(0, hi - cur_hi)
+        if n_claim and slot not in self._reserve \
+                and n_claim > self.n_available():
+            # a reserving slot's ring headroom is pre-counted in
+            # outstanding_blocks(); an unreserved (lazy) slot must not eat
+            # into other slots' reservations
+            raise CacheExhausted(
+                f"slot {slot}: window ring needs {n_claim} more blocks, "
+                f"{self.n_available()} available")
+        fresh = self._claim(n_claim, f"slot {slot} window ring")
         for i, b in enumerate(fresh):
             ring[cur_hi + 1 + i] = b
         self._group_in_use["window"] += len(fresh)
@@ -384,13 +602,22 @@ class BlockAllocator:
 
     def free_slot(self, slot: int) -> int:
         """Reclaim every group's resources owned by ``slot`` (EOS /
-        max-tokens). Returns the number of blocks returned to the pool."""
+        max-tokens).  Global-table entries are *released* (refcount
+        decrement): a block still referenced by another slot stays live,
+        and a committed refcount-0 block parks in the LRU cached pool
+        instead of the free list.  Returns the number of table entries the
+        slot relinquished across all groups."""
         if slot not in self.tables:
-            raise KeyError(f"slot {slot} has no allocation")
+            raise AllocatorInvariantError(f"slot {slot} has no allocation")
         blocks = self.tables.pop(slot)
         self._tokens.pop(slot)
-        self._free.extend(reversed(blocks))
-        self._group_in_use["global"] -= len(blocks)
+        self._reserve.pop(slot, None)
+        self._slot_hashes.pop(slot, None)
+        self.matched_tokens.pop(slot, None)
+        # reversed so blocks re-enter the LIFO free list in table order
+        # (the next allocation reuses them first, in the same order)
+        for block in reversed(blocks):
+            self._release(block)
         ring = self.window_tables.pop(slot, None)
         if ring:
             ring_blocks = [ring[i] for i in sorted(ring, reverse=True)]
@@ -405,24 +632,178 @@ class BlockAllocator:
         self._state_slots.discard(slot)
         return len(blocks)
 
+    # -- prefix cache -----------------------------------------------------------
+    def commit_slot(self, slot: int) -> int:
+        """Publish ``slot``'s full prompt blocks into the prefix index
+        (call once the prompt's K/V is physically resident, i.e. when its
+        prefill completes).  Blocks already indexed — the slot's matched
+        prefix, or content another slot committed first — are skipped, so
+        a hash maps to exactly one physical block.  Returns the number of
+        newly indexed blocks.  No-op on non-sharable layouts."""
+        if not (self.layout.sharable and self.layout.has_global):
+            return 0
+        if slot not in self.tables:
+            raise AllocatorInvariantError(f"slot {slot} has no allocation")
+        fresh = 0
+        for h, block in zip(self._slot_hashes.get(slot, ()),
+                            self.tables[slot]):
+            if self._hash_of.get(block) == h:
+                continue                      # already carries this content
+            if h in self._index or block in self._hash_of:
+                continue                      # content owned elsewhere
+            self._index[h] = block
+            self._hash_of[block] = h
+            fresh += 1
+        self.stats["commits"] += fresh
+        return fresh
+
+    def is_block_shared(self, slot: int, block_idx: int) -> bool:
+        """True when writing ``slot``'s table entry ``block_idx`` would be
+        visible beyond the slot: another slot references the block, or the
+        prefix index expects its content to stay intact."""
+        block = self.tables[slot][block_idx]
+        return self._ref.get(block, 0) > 1 or block in self._hash_of
+
+    def ensure_private(self, slot: int, block_idx: int) -> Optional[tuple]:
+        """Copy-on-write: give ``slot`` a private block at table entry
+        ``block_idx`` if the current one is shared or indexed.  Returns
+        ``(src, dst)`` physical ids when forked — the *caller* must copy
+        the physical content src -> dst (the allocator's stores may be
+        stale while the engine is mid-run) — or None when the entry is
+        already private.  The source keeps its index entry, so the cached
+        prefix survives the fork."""
+        table = self.tables[slot]
+        src = table[block_idx]
+        if not self.is_block_shared(slot, block_idx):
+            return None
+        dst = self._claim(1, f"slot {slot} CoW fork")[0]
+        self._retain(dst)
+        table[block_idx] = dst
+        self._release(src)
+        self.stats["cow_forks"] += 1
+        return src, dst
+
+    def copy_block(self, src: int, dst: int, group: str = "global") -> None:
+        """Copy one block's physical content across all of ``group``'s
+        attached stores (host-side CoW for tests/debugging; the engine
+        copies inside its jitted step instead)."""
+        for store, g in zip(self.stores, self.store_groups):
+            if g != group:
+                continue
+            store.k_pages = store.k_pages.at[:, dst].set(store.k_pages[:, src])
+            store.v_pages = store.v_pages.at[:, dst].set(store.v_pages[:, src])
+
+    def drop_cached(self) -> int:
+        """Evict every refcount-0 cached block back to the free list
+        (returns how many) — empties the prefix index of anything not
+        currently live."""
+        n = 0
+        while self._cached:
+            self._free.append(self._evict_lru())
+            n += 1
+        return n
+
+    def cached_blocks(self) -> int:
+        return len(self._cached)
+
+    def prefix_stats(self) -> dict:
+        """Cumulative prefix-cache counters plus an instantaneous view of
+        the pool's sharing state."""
+        shared = sum(1 for r in self._ref.values() if r > 1)
+        saved = sum(r - 1 for r in self._ref.values() if r > 1)
+        return dict(self.stats, cached_blocks=len(self._cached),
+                    shared_blocks=shared, saved_blocks=saved,
+                    indexed_blocks=len(self._index))
+
+    def shared_saved_bytes(self) -> int:
+        """Physical HBM bytes deduplicated right now by prefix sharing:
+        each extra reference to a live global block saves one block's
+        bytes (0 with no global store attached)."""
+        bb = sum(s.block_bytes for s, g in zip(self.stores,
+                                               self.store_groups)
+                 if g == "global")
+        return sum(r - 1 for r in self._ref.values() if r > 1) * bb
+
+    # -- invariants --------------------------------------------------------------
+    def check(self) -> None:
+        """Full structural invariant check: refcounts equal table
+        references, every block is in exactly one of free / cached / live
+        / window / cross, the hash index is a bijection onto committed
+        blocks, cached blocks have refcount 0, and reservations never
+        exceed the allocatable pool."""
+        refs: dict[int, int] = {}
+        for table in self.tables.values():
+            for block in table:
+                refs[block] = refs.get(block, 0) + 1
+        if refs != self._ref:
+            diff = {b: (refs.get(b), self._ref.get(b))
+                    for b in set(refs) | set(self._ref)
+                    if refs.get(b) != self._ref.get(b)}
+            raise AllocatorInvariantError(
+                f"refcount ledger disagrees with tables "
+                f"(block: tables vs ledger): {diff}")
+        window = [b for ring in self.window_tables.values()
+                  for b in ring.values()]
+        cross = [b for t in self.cross_tables.values() for b in t]
+        everything = (self._free + list(self._cached) + list(self._ref)
+                      + window + cross)
+        if len(set(everything)) != len(everything):
+            raise AllocatorInvariantError(
+                "a block is owned twice across free/cached/live/window/cross")
+        if len(everything) != self.config.n_blocks:
+            raise AllocatorInvariantError(
+                f"{self.config.n_blocks - len(everything)} blocks "
+                "unaccounted for")
+        for h, block in self._index.items():
+            if self._hash_of.get(block) != h:
+                raise AllocatorInvariantError(
+                    f"index maps {h!r} to block {block} whose committed "
+                    f"hash is {self._hash_of.get(block)!r}")
+        free_set = set(self._free)
+        for block in self._hash_of:
+            if block in free_set:
+                raise AllocatorInvariantError(
+                    f"committed block {block} is on the free list")
+        for block in self._cached:
+            if block not in self._hash_of:
+                raise AllocatorInvariantError(
+                    f"cached block {block} has no committed hash")
+            if self._ref.get(block):
+                raise AllocatorInvariantError(
+                    f"cached block {block} has live references")
+        if self._group_in_use["global"] != len(self._ref):
+            raise AllocatorInvariantError(
+                f"global in-use ledger {self._group_in_use['global']} != "
+                f"{len(self._ref)} live blocks")
+        if self._group_in_use["window"] != len(window):
+            raise AllocatorInvariantError("window in-use ledger mismatch")
+        if self._group_in_use["cross"] != len(cross):
+            raise AllocatorInvariantError("cross in-use ledger mismatch")
+        if self.outstanding_blocks() > self.n_free:
+            raise AllocatorInvariantError(
+                f"reservations outstanding ({self.outstanding_blocks()}) "
+                f"exceed allocatable blocks ({self.n_free})")
+
     def check_no_leaks(self) -> None:
-        """Invariant check: with no live slots, the whole pool is free."""
+        """Invariant check: with no live slots, every block is either free
+        or parked (refcount 0) in the prefix cache."""
         if self.tables:
-            raise AssertionError(f"live tables remain: {sorted(self.tables)}")
+            raise AllocatorInvariantError(
+                f"live tables remain: {sorted(self.tables)}")
         if self.window_tables:
-            raise AssertionError(
+            raise AllocatorInvariantError(
                 f"live window rings remain: {sorted(self.window_tables)}")
         if self.cross_tables:
-            raise AssertionError(
+            raise AllocatorInvariantError(
                 f"live cross block sets remain: {sorted(self.cross_tables)}")
         if self._state_slots:
-            raise AssertionError(
+            raise AllocatorInvariantError(
                 f"live state slots remain: {sorted(self._state_slots)}")
-        if len(self._free) != self.config.n_blocks:
-            leaked = self.config.n_blocks - len(self._free)
-            raise AssertionError(f"{leaked} blocks leaked")
-        if len(set(self._free)) != len(self._free):
-            raise AssertionError("duplicate block ids in free list")
+        if len(self._free) + len(self._cached) != self.config.n_blocks:
+            leaked = self.config.n_blocks - len(self._free) \
+                - len(self._cached)
+            raise AllocatorInvariantError(f"{leaked} blocks leaked")
+        self.check()
 
     # -- physical store ----------------------------------------------------------
     def attach_store(self, store: PagedKVStore, group: str = "global") -> None:

@@ -64,7 +64,8 @@ from repro.models import lm
 from repro.models.config import ModelConfig, ShapeConfig
 from repro.runtime.telemetry import ServeTelemetry
 
-from .cache import BlockAllocator, CacheConfig, CacheLayout, PagedKVStore
+from .cache import (BlockAllocator, CacheConfig, CacheExhausted, CacheLayout,
+                    PagedKVStore)
 from .scheduler import ActiveSlot, Request, SlotScheduler
 
 PREFILL_BUCKET_FLOOR = 8
@@ -269,6 +270,23 @@ class ContinuousEngine:
       exactly one prefill compile regardless of prompt lengths.  Recurrent
       layers carry their scan state across a lane's chunks; a frontend
       arch's projected rows ride the chunk stream as embedding rows.
+    * ``prefix_cache=True`` — (paged only, archs where
+      ``lm.prefix_sharable_reason`` is None) content-addressed block
+      reuse: admissions match their prompt hash chain against committed
+      blocks and share the hits read-only (CoW on the one divergent
+      write).  With chunked prefill the skipped prefix is skipped in
+      *compute* too (chunks start at the first uncached position);
+      whole-prompt prefills recompute but share the memory.
+
+    Admission pricing (``pricing=``, see ``SlotScheduler``): ``"worst"``
+    (default) reserves each request's full ``prompt + max_new`` growth at
+    admission so decode can never exhaust the pool; ``"lazy"`` reproduces
+    the historical oversubscription, backstopped by preempt-and-requeue —
+    on a mid-decode ``CacheExhausted`` the engine evicts the *youngest*
+    slot, requeues its request at the queue head, and retries; strict
+    FCFS plus greedy determinism keeps every request's tokens identical.
+    ``cache_blocks`` overrides the self-sized block pool (the way to an
+    oversubscribed pool; the default sizes for every lane's worst case).
     """
 
     cfg: ModelConfig
@@ -281,6 +299,9 @@ class ContinuousEngine:
     paged: bool = False
     bucket_prompts: bool = False
     prefill_chunk: int = 0
+    prefix_cache: bool = False
+    pricing: str = "worst"
+    cache_blocks: Optional[int] = None
     telemetry: Optional[ServeTelemetry] = None
     # optional compiled-plan artifact (repro.core.plan.CompiledPlan): sizes
     # the cache length and lane count from the planned decode shape instead
@@ -326,6 +347,14 @@ class ContinuousEngine:
         if self.prefill_chunk and not self.paged:
             raise ValueError("prefill_chunk requires paged=True (chunks are "
                              "written straight into the page pools)")
+        if self.prefix_cache:
+            if not self.paged:
+                raise ValueError("prefix_cache requires paged=True (block "
+                                 "reuse shares physical pages)")
+            reason = lm.prefix_sharable_reason(self.cfg)
+            if reason is not None:
+                raise ValueError(f"{self.cfg.name}: prefix cache "
+                                 f"unavailable — {reason}")
         groups = lm.serve_groups(self.cfg)
         self._has_global = bool(groups["paged"])
         self._has_window = bool(groups["window"])
@@ -356,11 +385,22 @@ class ContinuousEngine:
             per_slot += self._cross_cap_blocks()
             n_blocks = self.n_slots * per_slot
         else:
-            n_blocks = self.n_slots * -(-self.kv_len // self.block_size)
+            # dense accounting must budget *physical* rows — kv_len plus a
+            # VLM's frontend_extra — or worst-case growth of a full-kv_len
+            # request would exhaust the pool mid-decode (the old
+            # self.kv_len sizing did exactly that for frontend archs)
+            n_blocks = self.n_slots * -(-self._kv_total // self.block_size)
+        if self.cache_blocks is not None:
+            # explicit (usually oversubscribed) pool: worst pricing then
+            # throttles admission to what truly fits, lazy pricing leans
+            # on preempt-and-requeue
+            if self.cache_blocks < 1:
+                raise ValueError("cache_blocks must be >= 1")
+            n_blocks = self.cache_blocks
         self.allocator = BlockAllocator(CacheConfig(
             block_size=self.block_size, n_blocks=n_blocks))
         self.scheduler = SlotScheduler(self.n_slots, self.allocator,
-                                       self.kv_len)
+                                       self.kv_len, pricing=self.pricing)
         if self.telemetry is None:
             self.telemetry = ServeTelemetry()
 
@@ -376,8 +416,12 @@ class ContinuousEngine:
         self._pos = jnp.zeros((self.n_slots,), jnp.int32)
         self._now = 0
         self._rids: set = set()
-        # slot -> (prompt tokens, chunks done) while chunk-prefilling
+        # slot -> [prompt tokens/rows, chunks done, skip] while
+        # chunk-prefilling (``skip`` = prefix-cache positions not recomputed)
         self._prefilling: dict[int, list] = {}
+        # (preemptions, hit_tokens, lookup_tokens) at the last recorded
+        # step — _record_step reports per-step deltas of these ledgers
+        self._stats_last = (0, 0, 0)
 
         if self.paged:
             self._init_paged()
@@ -465,7 +509,8 @@ class ContinuousEngine:
             prefill_chunk=self.prefill_chunk,
             cross_tokens=self.cfg.frontend_tokens if self._has_cross else 0,
             cross_cap_blocks=self._cross_width,
-            frontend_extra=self._frontend_extra))
+            frontend_extra=self._frontend_extra,
+            sharable=self.prefix_cache))
         self._null_row = jnp.full((self._max_blocks,), null, jnp.int32)
         self._null_rows = {"global": self._null_row,
                            "window": self._null_row,
@@ -491,10 +536,19 @@ class ContinuousEngine:
                 self.cfg, self.prefill_chunk, self.impl,
                 embeds=bool(self._frontend_extra)))
 
-        def paged_insert(caches, single, rows, slot):
+        def paged_insert(caches, single, rows, slot, skip):
             return lm.insert_paged_prompt(
                 self.cfg, caches, single, rows, slot,
-                block_size=self.block_size, null_block=null)
+                block_size=self.block_size, null_block=null,
+                skip_below=skip)
+
+        if self.prefix_cache:
+            # physical page copy for copy-on-write forks: the allocator
+            # hands out (src, dst) block ids, this moves the bytes
+            def copy_block(caches, src, dst):
+                return lm.copy_paged_block(self.cfg, caches, src, dst)
+
+            self._copy_block = jax.jit(copy_block)
 
         def reset_state(caches, single, slot):
             return lm.write_state_lanes(self.cfg, caches, single, slot)
@@ -571,10 +625,13 @@ class ContinuousEngine:
             self._next_rid += 1
         elif rid in self._rids:
             raise ValueError(f"duplicate request id {rid!r}")
+        hashes = (lm.prompt_block_hashes(prompt, self.block_size)
+                  if self.prefix_cache else None)
         self.scheduler.submit(Request(rid=rid, prompt=prompt,
                                       max_new_tokens=max_new_tokens,
                                       arrival=arrival, eos_id=eos_id,
-                                      frontend_emb=frontend_emb))
+                                      frontend_emb=frontend_emb,
+                                      block_hashes=hashes))
         self._rids.add(rid)          # only after validation succeeded
         return rid
 
@@ -638,8 +695,27 @@ class ContinuousEngine:
                 self._caches, cache, self._toks, self._pos,
                 jnp.asarray(slot, jnp.int32), tok[0],
                 jnp.asarray(start_pos, jnp.int32))
+            act.first_token_step = self._now
             act.tokens.append(int(tok[0]))
             return
+        # prefix-cache hit: positions below ``skip`` are already resident
+        # in shared blocks.  At least one position must be recomputed so
+        # the first-token logits exist, hence the prompt_len - 1 cap; when
+        # the cap pulls the first recomputed position back INTO a shared
+        # block (whole-prompt block-aligned hit), that block is forked
+        # copy-on-write before the write lands.
+        skip = 0
+        if self.prefix_cache:
+            matched = self.allocator.matched_tokens.get(slot, 0)
+            skip = min(matched, prompt_len - 1)
+            if matched > skip:
+                pair = self.allocator.ensure_private(
+                    slot, skip // self.block_size)
+                if pair is not None:
+                    src, dst = pair
+                    self._caches = self._copy_block(
+                        self._caches, jnp.asarray(src, jnp.int32),
+                        jnp.asarray(dst, jnp.int32))
         self._rows[slot] = {}
         for group in self._tables:
             self._refresh_row(slot, group)
@@ -664,12 +740,19 @@ class ContinuousEngine:
                                             fe)
             else:
                 item = prompt
-            self._prefilling[slot] = [item, 0]
+            self._prefilling[slot] = [item, 0, skip]
             return
+        # whole-prompt prefill recomputes everything (memory sharing only:
+        # the insert masks writes below ``skip`` so shared blocks stay
+        # read-only); the chunked path above also skips the *compute*
         tok, cache = self._full_prefill(prompt_len, prompt, fe1)
         self._caches = self._insert_p(self._caches, cache, self._rows[slot],
-                                      jnp.asarray(slot, jnp.int32))
+                                      jnp.asarray(slot, jnp.int32),
+                                      jnp.asarray(skip, jnp.int32))
+        if self.prefix_cache:
+            self.allocator.commit_slot(slot)
         self._activate_lane(slot, tok[0], start_pos)
+        act.first_token_step = self._now
         act.tokens.append(int(tok[0]))
 
     def _run_chunk(self, slot: int) -> bool:
@@ -677,9 +760,9 @@ class ContinuousEngine:
         (and activates the decode lane) when the prompt is fully resident.
         The chunk stream is token ids, or precomputed embedding rows for a
         modality-frontend arch (``total`` then counts frontend rows too)."""
-        item, done = self._prefilling[slot]
+        item, done, skip = self._prefilling[slot]
         C = self.prefill_chunk
-        start = done * C
+        start = skip + done * C    # prefix-cache hit: skip cached positions
         total = item.shape[0]
         piece = item[start:start + C]
         valid = piece.shape[0]                 # real rows in this slice
@@ -703,8 +786,12 @@ class ContinuousEngine:
         if start + C < total:
             return False
         del self._prefilling[slot]
+        if self.prefix_cache:
+            self.allocator.commit_slot(slot)
         self._activate_lane(slot, tok[0], total)
-        self.scheduler.active[slot].tokens.append(int(tok[0]))
+        act = self.scheduler.active[slot]
+        act.first_token_step = self._now
+        act.tokens.append(int(tok[0]))
         return True
 
     def _finish(self, slot: int) -> list:
@@ -738,6 +825,33 @@ class ContinuousEngine:
                     row = self._refresh_row(slot, "window")
                     self._tables["window"] = \
                         self._tables["window"].at[slot].set(row)
+
+    def _pick_victim(self) -> Optional[int]:
+        """Youngest active slot (latest admission, slot id breaking ties) —
+        preempting the youngest discards the least work, and requeueing it
+        at the queue head under strict FCFS keeps completion order (and
+        greedy-decode tokens) identical to an uninterrupted run.  None
+        when at most one slot is active: evicting the only lane cannot
+        free enough for its own re-admission to fare better, so the caller
+        should let ``CacheExhausted`` propagate."""
+        if len(self.scheduler.active) <= 1:
+            return None
+        return max(self.scheduler.active.values(),
+                   key=lambda a: (a.admitted_at, a.slot)).slot
+
+    def _preempt(self, slot: int) -> None:
+        """Evict ``slot`` mid-flight (the lazy-pricing ``CacheExhausted``
+        safety net): discard its generated tokens, requeue its request at
+        the queue head, reclaim its cache blocks, and null its published
+        table rows so the decode step cannot touch freed pages."""
+        self.scheduler.preempt(slot)
+        self._prefilling.pop(slot, None)
+        if self.paged:
+            for group in self._tables:
+                self._tables[group] = self._tables[group].at[slot].set(
+                    self._null_rows[group])
+            self._rows.pop(slot, None)
+            self._host_pos.pop(slot, None)
 
     def run(self, max_steps: Optional[int] = None) -> dict:
         """Serve every queued request to completion. Returns
@@ -784,11 +898,40 @@ class ContinuousEngine:
                 nxt = self.scheduler.next_arrival()
                 if nxt is None:
                     break
+                if nxt <= now and not self.scheduler.active:
+                    # the queue head has arrived, nothing is running that
+                    # could ever free capacity, and admission still refused
+                    # it: the request can never fit.  Fail loudly instead
+                    # of spinning the idle-jump forever.
+                    head = self.scheduler._pending[0]
+                    raise CacheExhausted(
+                        f"request {head.rid!r} (prompt {head.prompt_len} + "
+                        f"max_new {head.max_new_tokens}) can never be "
+                        f"admitted: the empty pool "
+                        f"({self.allocator.n_blocks} blocks) is too small "
+                        f"for its admission price")
                 self._now = max(now + 1, nxt)  # idle: jump to next arrival
                 continue
 
             if self.paged:
-                self._grow_tables(decoding)
+                while True:
+                    try:
+                        self._grow_tables(decoding)
+                        break
+                    except CacheExhausted:
+                        # lazy pricing's mid-decode OOM: preempt the
+                        # youngest slot and retry (extend is idempotent
+                        # for the already-grown lanes)
+                        victim = self._pick_victim()
+                        if victim is None:
+                            raise
+                        self._preempt(victim)
+                        decoding = [s for s in decoding if s != victim]
+                if not decoding:           # every decoding lane was evicted
+                    self._record_step(now, t0, (), prefills, chunks, 0)
+                    self._now = now + 1
+                    steps += 1
+                    continue
                 active = np.zeros((self.n_slots,), bool)
                 active[decoding] = True
                 toks, self._caches = self._decode_p(
@@ -802,7 +945,9 @@ class ContinuousEngine:
             toks_host = np.asarray(toks)       # one device->host transfer
             new_tokens = 0
             for slot in decoding:
-                act = self.scheduler.active[slot]
+                act = self.scheduler.active.get(slot)
+                if act is None:
+                    continue               # preempted by an earlier lane
                 act.tokens.append(int(toks_host[slot]))
                 new_tokens += 1
                 if self.paged:
@@ -811,7 +956,22 @@ class ContinuousEngine:
                     # cache entries resident after this step: prompt + all
                     # decode writes so far (the just-emitted token is not
                     # yet written); paged growth happened eagerly above
-                    self.allocator.extend(slot, act.position - 1)
+                    preempted_self = False
+                    while True:
+                        try:
+                            self.allocator.extend(slot, act.position - 1)
+                            break
+                        except CacheExhausted:
+                            victim = self._pick_victim()
+                            if victim is None:
+                                raise
+                            self._preempt(victim)
+                            if victim == slot:
+                                preempted_self = True
+                                break
+                    if preempted_self:
+                        new_tokens -= 1    # its token was discarded
+                        continue
                 if act.is_finished():
                     results[act.request.rid] = self._finish(slot)
             self._record_step(now, t0, decoding, prefills, chunks, new_tokens)
@@ -824,6 +984,12 @@ class ContinuousEngine:
     def _record_step(self, now: int, t0: float, active_slots, prefills: int,
                      chunks: int, new_tokens: int) -> None:
         by_group = self.allocator.resident_bytes_by_group()
+        # per-step deltas of the cumulative ledgers
+        stats = self.allocator.stats
+        cur = (self.scheduler.preemptions, stats["hit_tokens"],
+               stats["lookup_tokens"])
+        prev = self._stats_last
+        self._stats_last = cur
         self.telemetry.record_step(
             step=now, seconds=time.perf_counter() - t0,
             active_slots=active_slots, n_slots=self.n_slots,
@@ -832,4 +998,9 @@ class ContinuousEngine:
             prefills=prefills, prefill_chunks=chunks, new_tokens=new_tokens,
             resident_bytes=sum(by_group.values()),
             capacity_bytes=self.allocator.capacity_bytes(),
-            resident_by_group=by_group if self.paged else None)
+            resident_by_group=by_group if self.paged else None,
+            preemptions=cur[0] - prev[0],
+            prefix_hit_tokens=cur[1] - prev[1],
+            prefix_lookup_tokens=cur[2] - prev[2],
+            shared_saved_bytes=self.allocator.shared_saved_bytes(),
+            cached_blocks=self.allocator.cached_blocks())

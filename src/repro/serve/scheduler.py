@@ -8,9 +8,20 @@ completion order is predictable) and is gated on the block allocator, which
 prices the request across every cache group its ``CacheLayout`` declares:
 global block tables grow with the prompt (plus any VLM frontend rows), a
 window ring is priced at its O(window) block cap, an enc-dec cross block set
-at its full static size, and recurrent layers need a free state slot.  A
-request is only admitted when its worst case (prompt + max_new_tokens) fits
-in ``kv_len`` and that price is free right now.
+at its full static size, and recurrent layers need a free state slot.
+
+Two admission pricing modes (``pricing=``):
+
+* ``"worst"`` (default) — a request is admitted only when its worst case
+  (``prompt_len + max_new_tokens`` logical tokens, plus every group price)
+  fits the pool *net of other slots' reservations*, and that worst case is
+  reserved with the allocator.  Every admitted request is then guaranteed
+  to decode to its budget without a mid-decode ``CacheExhausted``.
+* ``"lazy"`` — the historical oversubscribing mode: only the prefill
+  footprint (``prompt_len + 1``) is priced, decode growth claims blocks as
+  it goes, and growth can raise ``CacheExhausted`` mid-decode.  The engine
+  then preempts the youngest slot (``preempt``) and requeues its request
+  at the head of the queue rather than crashing the step.
 
 Arrivals are measured in engine steps (one step = one batched decode), which
 keeps tests and benchmarks deterministic; the launcher maps wall-clock
@@ -33,7 +44,10 @@ class Request:
     ``frontend_emb`` carries the request's precomputed modality-frontend
     embeddings ([frontend_tokens, frontend_dim]) for VLM / enc-dec archs —
     the encoder (or frontend projection) runs once at admission, so the
-    trace itself stays host-side data."""
+    trace itself stays host-side data.  ``block_hashes`` is the prompt's
+    content hash chain over full cache blocks
+    (``models.lm.prompt_block_hashes``) — the engine fills it in when the
+    prefix cache is on, and the allocator matches it at admission."""
 
     rid: object
     prompt: object                   # int sequence / [S] array of token ids
@@ -41,6 +55,7 @@ class Request:
     arrival: int = 0                 # engine step at which the request exists
     eos_id: Optional[int] = None     # stop early when this token is emitted
     frontend_emb: Optional[object] = None
+    block_hashes: Optional[tuple] = None
 
     @property
     def prompt_len(self) -> int:
@@ -55,6 +70,9 @@ class ActiveSlot:
     slot: int
     admitted_at: int
     tokens: list = field(default_factory=list)   # generated token ids
+    # engine step at which the first token was emitted (prefill complete) —
+    # admission -> first-token latency is first_token_step - request.arrival
+    first_token_step: Optional[int] = None
 
     @property
     def n_generated(self) -> int:
@@ -73,21 +91,41 @@ class ActiveSlot:
 
 
 class SlotScheduler:
-    """FCFS admission of queued requests into free batch slots."""
+    """FCFS admission of queued requests into free batch slots.
 
-    def __init__(self, n_slots: int, allocator: BlockAllocator, kv_len: int):
+    ``pricing="worst"`` (default) reserves each admission's worst case
+    with the allocator so decode can never hit ``CacheExhausted``;
+    ``pricing="lazy"`` keeps the historical oversubscribing behaviour
+    (see module docstring) and relies on ``preempt`` as the safety net."""
+
+    def __init__(self, n_slots: int, allocator: BlockAllocator, kv_len: int,
+                 pricing: str = "worst"):
+        if pricing not in ("worst", "lazy"):
+            raise ValueError(f"pricing must be 'worst' or 'lazy', "
+                             f"got {pricing!r}")
         self.n_slots = n_slots
         self.allocator = allocator
         self.kv_len = kv_len
+        self.pricing = pricing
         self._free_slots: list[int] = list(range(n_slots - 1, -1, -1))
         self._pending: deque[Request] = deque()
         self.active: dict[int, ActiveSlot] = {}
         self.finished: list[ActiveSlot] = []
         # slot -> number of requests that have occupied it (reuse accounting)
         self.slot_admissions: dict[int, int] = {s: 0 for s in range(n_slots)}
+        self.preemptions = 0
 
     # -- intake -----------------------------------------------------------------
     def submit(self, request: Request) -> None:
+        """Queue a request after validating it can ever be served.
+
+        The ``worst > kv_len`` bound is in *logical* tokens on purpose:
+        ``kv_len`` is the per-lane logical capacity, and a VLM's
+        ``frontend_extra`` physical rows are added by the allocator's
+        layout when pricing (and by the engine when sizing its pools to
+        ``kv_len + frontend_extra``), so a request at exactly the bound
+        fits its lane's physical table — asserted per arch by the
+        engine-level worst-case sizing test."""
         worst = request.prompt_len + request.max_new_tokens
         if worst > self.kv_len:
             raise ValueError(
@@ -102,20 +140,27 @@ class SlotScheduler:
     # -- admission ---------------------------------------------------------------
     def admit(self, now: int) -> list[ActiveSlot]:
         """Admit arrived requests into free slots, FCFS, until the first one
-        that has not arrived yet or does not fit. Prefill resources (prompt
+        that has not arrived yet or does not fit.  Prefill resources (prompt
         blocks + the first generated token's slot, the window ring, the
         recurrent state slot — whatever the allocator's layout prices) are
-        allocated here; decode growth is lazy."""
+        allocated here; under ``"worst"`` pricing the request's full
+        ``prompt + max_new_tokens`` growth is additionally reserved, so
+        later ``extend`` calls cannot fail.  A request's ``block_hashes``
+        are handed to the allocator for prefix matching."""
         admitted: list[ActiveSlot] = []
         while self._pending and self._free_slots:
             req = self._pending[0]
             if req.arrival > now:
                 break
-            if not self.allocator.can_allocate(req.prompt_len + 1):
+            reserve = (req.prompt_len + req.max_new_tokens
+                       if self.pricing == "worst" else None)
+            if not self.allocator.can_allocate(req.prompt_len + 1, reserve):
                 break
             self._pending.popleft()
             slot = self._free_slots.pop()
-            self.allocator.allocate(slot, req.prompt_len + 1)
+            self.allocator.allocate(slot, req.prompt_len + 1,
+                                    reserve_tokens=reserve,
+                                    block_hashes=req.block_hashes)
             act = ActiveSlot(request=req, slot=slot, admitted_at=now)
             self.active[slot] = act
             self.slot_admissions[slot] += 1
@@ -130,6 +175,23 @@ class SlotScheduler:
         self.allocator.free_slot(slot)
         self._free_slots.append(slot)
         self.finished.append(act)
+        return act
+
+    def preempt(self, slot: int) -> ActiveSlot:
+        """Evict the request in ``slot`` and requeue it at the *head* of
+        the queue (it stays first in FCFS order, so re-admission — and
+        greedy decoding's determinism — keeps its tokens identical to an
+        uninterrupted run).  Generated tokens are discarded; the decode
+        restarts from the prompt on re-admission, where any prefix blocks
+        committed before preemption are matched again.  This is the lazy
+        pricing mode's mid-decode ``CacheExhausted`` safety net."""
+        act = self.active.pop(slot)
+        self.allocator.free_slot(slot)
+        self._free_slots.append(slot)
+        act.tokens.clear()
+        act.first_token_step = None
+        self._pending.appendleft(act.request)
+        self.preemptions += 1
         return act
 
     # -- queries -------------------------------------------------------------------

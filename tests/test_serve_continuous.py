@@ -7,8 +7,9 @@ import pytest
 
 from repro.configs import get
 from repro.models import lm
-from repro.serve import (BlockAllocator, CacheConfig, ContinuousEngine,
-                         Engine, Request, SlotScheduler)
+from repro.serve import (AllocatorInvariantError, BlockAllocator, CacheConfig,
+                         CacheError, CacheExhausted, ContinuousEngine, Engine,
+                         Request, SlotScheduler)
 
 
 # =============================================================================
@@ -97,17 +98,29 @@ def test_allocator_no_leaks_under_randomized_lifecycle():
 def test_allocator_rejects_over_capacity_and_double_ops():
     a = BlockAllocator(CacheConfig(block_size=4, n_blocks=2))
     assert not a.can_allocate(9)
-    with pytest.raises(MemoryError):
+    with pytest.raises(CacheExhausted):
         a.allocate(0, 9)
     a.allocate(0, 8)
-    with pytest.raises(ValueError):
+    with pytest.raises(AllocatorInvariantError):
         a.allocate(0, 1)                             # slot already allocated
-    with pytest.raises(MemoryError):
+    with pytest.raises(CacheExhausted):
         a.extend(0, 9)                               # pool exhausted
     a.free_slot(0)
-    with pytest.raises(KeyError):
+    with pytest.raises(AllocatorInvariantError):
         a.free_slot(0)                               # double free
     a.check_no_leaks()
+
+
+def test_cache_exceptions_distinguish_backpressure_from_bugs():
+    """``CacheExhausted`` (expected backpressure) stays catchable as the
+    historical ``MemoryError``; ``AllocatorInvariantError`` (a real bug)
+    is *not* a ``MemoryError``, so an engine's catch-and-preempt loop can
+    never swallow ledger corruption as if it were pool pressure."""
+    assert issubclass(CacheExhausted, CacheError)
+    assert issubclass(CacheExhausted, MemoryError)
+    assert issubclass(AllocatorInvariantError, CacheError)
+    assert issubclass(AllocatorInvariantError, AssertionError)
+    assert not issubclass(AllocatorInvariantError, MemoryError)
 
 
 # =============================================================================

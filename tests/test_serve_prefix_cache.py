@@ -1,0 +1,454 @@
+"""Prefix cache (content-addressed block reuse + CoW) and admission
+pricing: allocator-level refcount/index/eviction invariants, engine-level
+token identity against the uncached oracle, and the mid-decode
+pool-exhaustion regression (worst-case pricing admits safely; lazy pricing
+preempts-and-requeues instead of crashing)."""
+
+import random
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get
+from repro.models import lm
+from repro.serve import (BlockAllocator, CacheConfig, CacheExhausted,
+                         CacheLayout, ContinuousEngine, Engine, Request,
+                         SlotScheduler)
+
+# decoder-only token LMs with all-global/MLA layers — the sharable set
+SHARABLE_ARCHS = ("paper-mlp", "tinyllama-1.1b", "deepseek-v2-lite-16b")
+
+
+def _alloc(n_blocks=16, block_size=4):
+    a = BlockAllocator(CacheConfig(block_size=block_size, n_blocks=n_blocks))
+    a.set_layout(CacheLayout(has_global=True, sharable=True))
+    return a
+
+
+# =============================================================================
+# hash chain
+# =============================================================================
+
+def test_prompt_block_hashes_chain_properties():
+    bs = 4
+    p = list(range(1, 11))                       # 10 tokens -> 2 full blocks
+    h = lm.prompt_block_hashes(p, bs)
+    assert len(h) == 2                           # partial tail never hashed
+    assert lm.prompt_block_hashes(p[:8], bs) == h        # prefix-stable
+    assert lm.prompt_block_hashes(p, bs) == h            # deterministic
+    # same second block content under a different parent hashes differently
+    q = [99] + p[1:]
+    assert lm.prompt_block_hashes(q, bs)[1] != h[1]
+    assert lm.prompt_block_hashes(p[:3], bs) == ()       # no full block
+
+
+# =============================================================================
+# allocator: match, commit, share, CoW, eviction
+# =============================================================================
+
+def test_admission_matches_committed_prefix_and_shares_blocks():
+    a = _alloc()
+    p = list(range(12))                          # 3 full blocks
+    h = lm.prompt_block_hashes(p, 4)
+    t0 = a.allocate(0, 13, block_hashes=h)       # 12 prompt + 1 gen
+    assert a.matched_tokens[0] == 0              # cold cache
+    a.commit_slot(0)
+    t1 = a.allocate(1, 13, block_hashes=h)
+    assert a.matched_tokens[1] == 12             # all 3 full blocks hit
+    assert t1[:3] == t0[:3]                      # physically shared
+    assert t1[3] != t0[3]                        # private tail
+    assert a.shared_saved_bytes() == 0           # no stores attached
+    assert a.prefix_stats()["saved_blocks"] == 3
+    a.check()
+    a.free_slot(1)
+    a.free_slot(0)
+    a.check_no_leaks()
+
+
+def test_commit_is_idempotent_and_deduplicates_content():
+    a = _alloc()
+    p = list(range(8))
+    h = lm.prompt_block_hashes(p, 4)
+    a.allocate(0, 9, block_hashes=h)
+    assert a.commit_slot(0) == 2
+    assert a.commit_slot(0) == 0                 # already indexed
+    # a second slot that recomputed the same content commits nothing new:
+    # the hash still maps to exactly one physical block
+    a.allocate(1, 9, block_hashes=h)
+    assert a.matched_tokens[1] == 8
+    assert a.commit_slot(1) == 0
+    assert a.prefix_stats()["indexed_blocks"] == 2
+    a.free_slot(0)
+    a.free_slot(1)
+    a.check_no_leaks()
+
+
+def test_freed_committed_blocks_become_cached_not_free():
+    """Retiring a request decrements refcounts; its committed blocks park
+    in the cached pool (still allocatable capacity) and the next admission
+    with the same prefix re-hits them without any live sharer."""
+    a = _alloc()
+    p = list(range(8))
+    h = lm.prompt_block_hashes(p, 4)
+    t0 = a.allocate(0, 9, block_hashes=h)
+    a.commit_slot(0)
+    a.free_slot(0)
+    assert a.cached_blocks() == 2
+    assert a.n_free == a.n_blocks                # cached counts as capacity
+    t1 = a.allocate(1, 9, block_hashes=h)
+    assert a.matched_tokens[1] == 8 and t1[:2] == t0[:2]
+    a.free_slot(1)
+    a.check_no_leaks()
+
+
+def test_lru_evicts_oldest_cached_first_and_never_a_live_block():
+    a = _alloc(n_blocks=6, block_size=4)
+    ha = lm.prompt_block_hashes([1] * 8, 4)      # 2 blocks
+    hb = lm.prompt_block_hashes([2] * 8, 4)
+    a.allocate(0, 9, block_hashes=ha)
+    a.commit_slot(0)
+    a.free_slot(0)                               # A's 2 blocks cached (older)
+    a.allocate(0, 9, block_hashes=hb)
+    a.commit_slot(0)
+    a.free_slot(0)                               # B's cached (newer)... but B
+    # reclaimed A's LRU blocks for its own tail, so re-derive the state:
+    cached_before = a.cached_blocks()
+    # pin B live, then exhaust the pool: eviction must only take
+    # refcount-0 cached blocks, oldest first, never B's live ones
+    a.allocate(1, 9, block_hashes=hb)
+    assert a.matched_tokens[1] == 8
+    live = set(a.tables[1])
+    grabbed = a.allocate(2, 4 * (a.n_free - len(a.tables[2])
+                                 if 2 in a.tables else a.n_free))
+    assert not live & set(grabbed)               # live blocks untouched
+    assert a.stats["evictions"] >= 1
+    a.check()
+    a.free_slot(1)
+    a.free_slot(2)
+    a.check_no_leaks()
+    assert cached_before >= 1
+
+
+def test_cow_fork_gives_private_block_and_keeps_index():
+    a = _alloc()
+    p = list(range(8))                           # block-aligned prompt
+    h = lm.prompt_block_hashes(p, 4)
+    a.allocate(0, 9, block_hashes=h)
+    a.commit_slot(0)
+    a.allocate(1, 9, block_hashes=h)
+    src_table = list(a.tables[1])
+    assert a.is_block_shared(1, 1)
+    pair = a.ensure_private(1, 1)
+    assert pair is not None
+    src, dst = pair
+    assert src == src_table[1] and a.tables[1][1] == dst != src
+    assert a.ensure_private(1, 1) is None        # already private
+    # the source keeps its index entry: a third admission still hits it
+    a.allocate(2, 9, block_hashes=h)
+    assert a.matched_tokens[2] == 8 and a.tables[2][1] == src
+    assert a.stats["cow_forks"] == 1
+    a.check()
+    for s in (0, 1, 2):
+        a.free_slot(s)
+    a.check_no_leaks()
+
+
+def test_drop_cached_empties_the_index():
+    a = _alloc()
+    h = lm.prompt_block_hashes(list(range(8)), 4)
+    a.allocate(0, 9, block_hashes=h)
+    a.commit_slot(0)
+    a.free_slot(0)
+    assert a.drop_cached() == 2
+    assert a.cached_blocks() == 0
+    assert a.prefix_stats()["indexed_blocks"] == 0
+    a.allocate(1, 9, block_hashes=h)
+    assert a.matched_tokens[1] == 0              # cold again
+    a.free_slot(1)
+    a.check_no_leaks()
+
+
+def test_worst_case_reservation_blocks_overcommitting_admissions():
+    """Reserved growth headroom is unavailable to later admissions, and
+    growth within a slot's own reservation never raises."""
+    a = BlockAllocator(CacheConfig(block_size=4, n_blocks=8))
+    a.allocate(0, 5, reserve_tokens=24)          # reserves 6 blocks
+    assert a.n_available() == 2                  # 8 - 6 reserved
+    assert not a.can_allocate(5, reserve_tokens=12)   # 3 > 2 available
+    assert a.can_allocate(5, reserve_tokens=8)        # 2 <= 2
+    for n in range(6, 25):
+        a.extend(0, n)                           # within reservation: safe
+    a.free_slot(0)
+    a.check_no_leaks()
+
+
+# =============================================================================
+# randomized churn: refcounts, CoW, eviction, no leaks (satellite)
+# =============================================================================
+
+def test_refcount_invariants_under_randomized_churn():
+    """Overlapping prefix admissions, CoW forks, retirements and LRU
+    evictions in random order: the full structural check passes at every
+    step, terminal state leaks nothing, and eviction never touches a
+    refcounted block (check() would flag all of these)."""
+    rng = random.Random(7)
+    bs = 4
+    for trial in range(15):
+        a = _alloc(n_blocks=24, block_size=bs)
+        live: dict[int, int] = {}                # slot -> n_tokens
+        next_slot = 0
+        prefixes = [[rng.randrange(100)] * (bs * rng.randint(1, 3))
+                    for _ in range(4)]
+        for _ in range(120):
+            op = rng.random()
+            if op < 0.45:
+                prompt = (rng.choice(prefixes)
+                          + [rng.randrange(100)
+                             for _ in range(rng.randint(0, 2 * bs))])
+                want = len(prompt) + 1
+                h = lm.prompt_block_hashes(prompt, bs)
+                if a.can_allocate(want):
+                    a.allocate(next_slot, want, block_hashes=h)
+                    live[next_slot] = want
+                    next_slot += 1
+            elif op < 0.6 and live:
+                a.commit_slot(rng.choice(sorted(live)))
+            elif op < 0.75 and live:
+                slot = rng.choice(sorted(live))
+                idx = rng.randrange(len(a.tables[slot]))
+                if a.n_free >= 1:                # a fork claims one block
+                    pair = a.ensure_private(slot, idx)
+                    if pair is not None:
+                        a.copy_block(*pair)      # no stores attached: no-op
+            elif live:
+                slot = rng.choice(sorted(live))
+                a.free_slot(slot)
+                del live[slot]
+            a.check()
+        for slot in sorted(live):
+            a.free_slot(slot)
+        a.check_no_leaks()
+        a.drop_cached()
+        a.check_no_leaks()
+        assert a.n_free == a.n_blocks and not a._cached
+
+
+# =============================================================================
+# engine: token identity vs the uncached oracle
+# =============================================================================
+
+def _engine_setup(arch, seed=0, n=4, shared_len=24, tail=5):
+    cfg = get(arch).reduced()
+    key = jax.random.PRNGKey(seed)
+    params = lm.init_params(cfg, key, jnp.float32)
+    shared = jax.random.randint(key, (shared_len,), 0, cfg.vocab_size)
+    prompts = [jnp.concatenate([
+        shared, jax.random.randint(jax.random.fold_in(key, i), (tail + i,),
+                                   0, cfg.vocab_size)]) for i in range(n)]
+    return cfg, params, prompts
+
+
+@pytest.mark.parametrize("arch", SHARABLE_ARCHS)
+@pytest.mark.parametrize("mode", ["whole", "chunked"])
+def test_prefix_cache_token_identity_and_hits(arch, mode):
+    """Shared-prefix workload with the cache on: every request's tokens
+    equal the uncached ``Engine`` oracle's, later admissions hit the
+    committed prefix, and the allocator ends structurally clean."""
+    cfg, params, prompts = _engine_setup(arch)
+    kv_len = 64
+    ref = Engine(cfg, params, kv_len=kv_len)
+    expect = {i: ref.generate(p[None], max_new_tokens=6)[0].tolist()
+              for i, p in enumerate(prompts)}
+
+    kw = {"prefill_chunk": 8} if mode == "chunked" else {}
+    eng = ContinuousEngine(cfg, params, kv_len=kv_len, n_slots=2, paged=True,
+                           prefix_cache=True, **kw)
+    for i, p in enumerate(prompts):
+        eng.submit(p, max_new_tokens=6, rid=i, arrival=i)
+    results = eng.run()
+    assert results == expect
+    st = eng.allocator.prefix_stats()
+    assert st["hit_admissions"] >= 1 and st["hit_tokens"] > 0
+    assert eng.telemetry.prefix_hit_rate() > 0
+    eng.allocator.check()
+    eng.allocator.check_no_leaks()
+
+
+def test_prefix_cache_cow_on_block_aligned_identical_prompts():
+    """Identical block-aligned prompts force the first recomputed position
+    back into a shared block: the engine must fork it copy-on-write and
+    still emit oracle-identical tokens (a stale shared write would corrupt
+    the *other* requests' attention instead of its own)."""
+    cfg, params, _ = _engine_setup("paper-mlp")
+    key = jax.random.PRNGKey(9)
+    p = jax.random.randint(key, (32,), 0, cfg.vocab_size)   # 2 x block 16
+    ref = Engine(cfg, params, kv_len=64)
+    expect = ref.generate(p[None], max_new_tokens=6)[0].tolist()
+    for kw in ({}, {"prefill_chunk": 8}):
+        eng = ContinuousEngine(cfg, params, kv_len=64, n_slots=2, paged=True,
+                               prefix_cache=True, **kw)
+        for i in range(3):
+            eng.submit(p, max_new_tokens=6, rid=i)
+        results = eng.run()
+        assert results == {i: expect for i in range(3)}, kw
+        assert eng.allocator.stats["cow_forks"] >= 1, kw
+        eng.allocator.check()
+        eng.allocator.check_no_leaks()
+
+
+def test_prefix_cache_survives_retirement_and_lru_reuse():
+    """Requests arriving after the prefix's original owner retired still
+    hit its committed (cached, refcount-0) blocks."""
+    cfg, params, prompts = _engine_setup("paper-mlp", n=3)
+    eng = ContinuousEngine(cfg, params, kv_len=64, n_slots=1, paged=True,
+                           prefix_cache=True)
+    ref = Engine(cfg, params, kv_len=64)
+    for i, p in enumerate(prompts):
+        eng.submit(p, max_new_tokens=4, rid=i)
+    results = eng.run()                  # n_slots=1: strictly sequential
+    for i, p in enumerate(prompts):
+        assert results[i] == ref.generate(p[None], 4)[0].tolist()
+    assert eng.allocator.stats["hit_admissions"] == 2
+    assert eng.allocator.cached_blocks() > 0
+    eng.allocator.check_no_leaks()
+
+
+def test_prefix_cache_requires_paged_and_sharable_arch():
+    cfg = get("paper-mlp").reduced()
+    with pytest.raises(ValueError, match="paged"):
+        ContinuousEngine(cfg, params={}, kv_len=32, prefix_cache=True)
+    for arch in ("recurrentgemma-2b", "mamba2-370m", "phi-3-vision-4.2b",
+                 "seamless-m4t-medium"):
+        bad = get(arch).reduced()
+        assert lm.prefix_sharable_reason(bad) is not None
+        with pytest.raises(ValueError, match="prefix cache unavailable"):
+            ContinuousEngine(bad, params={}, kv_len=64, paged=True,
+                             prefix_cache=True)
+    for arch in SHARABLE_ARCHS:
+        assert lm.prefix_sharable_reason(get(arch).reduced()) is None
+
+
+# =============================================================================
+# the mid-decode OOM regression (flagship satellite)
+# =============================================================================
+
+def _oom_setup(seed=4, n=3):
+    cfg = get("paper-mlp").reduced()
+    key = jax.random.PRNGKey(seed)
+    params = lm.init_params(cfg, key, jnp.float32)
+    prompts = [jax.random.randint(jax.random.fold_in(key, i), (12,), 0,
+                                  cfg.vocab_size) for i in range(n)]
+    ref = Engine(cfg, params, kv_len=64)
+    expect = {i: ref.generate(p[None], max_new_tokens=20)[0].tolist()
+              for i, p in enumerate(prompts)}
+    return cfg, params, prompts, expect
+
+
+def test_worst_pricing_throttles_admission_no_mid_decode_oom():
+    """An oversubscribed pool (too small for all three worst cases at
+    once) under the default worst-case pricing: admission is throttled so
+    no request ever hits ``CacheExhausted`` mid-decode, and every emitted
+    token matches the oracle."""
+    cfg, params, prompts, expect = _oom_setup()
+    eng = ContinuousEngine(cfg, params, kv_len=64, n_slots=3, paged=True,
+                           cache_blocks=5)      # one worst case = 2 blocks
+    for i, p in enumerate(prompts):
+        eng.submit(p, max_new_tokens=20, rid=i)
+    assert eng.run() == expect
+    assert eng.scheduler.preemptions == 0
+    assert eng.scheduler.max_slot_reuse() >= 1
+    eng.allocator.check_no_leaks()
+
+
+def test_lazy_pricing_preempts_and_requeues_instead_of_crashing():
+    """The historical bug scenario: lazy pricing admits all three requests
+    into a pool that cannot hold their growth; decode must hit the wall,
+    preempt the youngest slot, requeue it at the queue head, and finish
+    every request with oracle-identical tokens — not crash the step."""
+    cfg, params, prompts, expect = _oom_setup()
+    eng = ContinuousEngine(cfg, params, kv_len=64, n_slots=3, paged=True,
+                           cache_blocks=5, pricing="lazy")
+    for i, p in enumerate(prompts):
+        eng.submit(p, max_new_tokens=20, rid=i)
+    results = eng.run()
+    assert eng.scheduler.preemptions >= 1       # the wall was actually hit
+    assert results == expect                    # token identity after requeue
+    assert eng.telemetry.total_preemptions() == eng.scheduler.preemptions
+    eng.allocator.check_no_leaks()
+
+
+def test_unservable_request_raises_instead_of_spinning():
+    """A request whose admission price exceeds the whole pool must raise
+    ``CacheExhausted`` from ``run()`` once nothing live could ever free
+    capacity for it — not idle-jump forever."""
+    cfg, params, prompts, _ = _oom_setup()
+    eng = ContinuousEngine(cfg, params, kv_len=64, n_slots=2, paged=True,
+                           cache_blocks=1, pricing="lazy")
+    # 24-token prompt needs 2 blocks at admission; the pool has 1, forever
+    eng.submit(jnp.concatenate([prompts[0], prompts[1]]),
+               max_new_tokens=20, rid=0)
+    with pytest.raises(CacheExhausted, match="never be admitted"):
+        eng.run()
+
+
+def test_preempt_resets_slot_state():
+    """``SlotScheduler.preempt`` clears generated tokens, returns the slot
+    to the free pool, requeues at the head, and counts the eviction."""
+    a = BlockAllocator(CacheConfig(block_size=4, n_blocks=16))
+    s = SlotScheduler(2, a, kv_len=32, pricing="lazy")
+    s.submit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=4))
+    s.submit(Request(rid=1, prompt=[4, 5, 6], max_new_tokens=4))
+    s.admit(0)
+    victim = s.active[1]
+    victim.tokens.extend([7, 8])
+    s.preempt(1)
+    assert s.preemptions == 1 and 1 not in s.active
+    assert victim.tokens == [] and victim.first_token_step is None
+    assert s.n_pending() == 1
+    readmitted = s.admit(0)                      # head of the queue again
+    assert readmitted[0].request.rid == 1
+
+
+# =============================================================================
+# admission-bound audit (satellite): worst-case request fills its lane
+# =============================================================================
+
+@pytest.mark.parametrize("arch,paged", [
+    ("paper-mlp", False), ("paper-mlp", True),
+    ("tinyllama-1.1b", True), ("gemma2-9b", True),
+    ("recurrentgemma-2b", True), ("mamba2-370m", True),
+    ("phi-3-vision-4.2b", False), ("phi-3-vision-4.2b", True),
+    ("seamless-m4t-medium", True),
+])
+def test_worst_case_request_grows_to_kv_len_without_exhaustion(arch, paged):
+    """`submit` bounds requests by ``prompt + max_new <= kv_len`` in
+    *logical* tokens.  This asserts the bound is safe per arch: a request
+    at exactly the bound is admitted into the engine's self-sized pool
+    (under worst-case pricing) and its table growth to the physical lane
+    limit — frontend rows included — never raises.  Pure accounting: the
+    allocator is driven exactly as the engine drives it, no model step."""
+    kv_len = 56 if arch == "phi-3-vision-4.2b" else 64
+    cfg = get(arch).reduced()
+    eng = ContinuousEngine(cfg, params={}, kv_len=kv_len, n_slots=2,
+                           paged=paged)
+    a, lay = eng.allocator, eng.allocator.layout
+    prompt_len, max_new = 5, kv_len - 5
+    for slot in range(eng.n_slots):              # every lane at worst case
+        assert a.can_allocate(prompt_len + 1,
+                              reserve_tokens=prompt_len + max_new)
+        a.allocate(slot, prompt_len + 1,
+                   reserve_tokens=prompt_len + max_new)
+    # paged growth passes physical resident rows (frontend rows folded
+    # in); dense growth passes logical token counts
+    F = eng._frontend_extra if paged else 0
+    for slot in range(eng.n_slots):
+        for n in range(F + prompt_len + 2, F + kv_len + 1):
+            if lay.has_global:
+                a.extend(slot, n)
+            if lay.window:
+                a.extend_window(slot, n)
+    a.check()
+    for slot in range(eng.n_slots):
+        a.free_slot(slot)
+    a.check_no_leaks()

@@ -1,0 +1,103 @@
+"""Diff a fresh serve-benchmark JSON against the committed baseline.
+
+CI runs the smoke benchmark (``benchmarks.serve_throughput --smoke
+--json``) and compares the result against the in-repo ``BENCH_serve.json``:
+
+* structure must match — same benchmark name, same set of row names, every
+  row carrying the baseline's metric keys (a renamed or dropped row is a
+  silent loss of coverage, which is exactly what a committed baseline
+  catches);
+* the prefix-cache acceptance invariants must hold in the *fresh* run —
+  the cache-on row hits the cache and does not lengthen the deterministic
+  admission -> first-token step count relative to the cache-off row;
+* timings are reported as deltas but never gate: absolute numbers are
+  machine-dependent, so only deterministic quantities fail the diff.
+
+Usage:
+    python tools/bench_diff.py BENCH_serve.json serve-smoke.json
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+# wall-clock metrics: reported, never gating
+TIMING_KEYS = ("us_per_call", "tok_per_sec", "decode_step_ms")
+
+
+def load(path: str) -> dict:
+    with open(path, encoding="utf-8") as fh:
+        return json.load(fh)
+
+
+def diff(baseline: dict, fresh: dict) -> list[str]:
+    errors: list[str] = []
+    if baseline.get("benchmark") != fresh.get("benchmark"):
+        errors.append(
+            f"benchmark name changed: {baseline.get('benchmark')!r} -> "
+            f"{fresh.get('benchmark')!r}"
+        )
+    base_rows = {r["name"]: r for r in baseline.get("rows", [])}
+    fresh_rows = {r["name"]: r for r in fresh.get("rows", [])}
+    for name in sorted(set(base_rows) - set(fresh_rows)):
+        errors.append(f"row disappeared from the fresh run: {name}")
+    for name in sorted(set(fresh_rows) - set(base_rows)):
+        errors.append(
+            f"new row not in the committed baseline (update "
+            f"BENCH_serve.json): {name}"
+        )
+    for name in sorted(set(base_rows) & set(fresh_rows)):
+        missing = set(base_rows[name]) - set(fresh_rows[name])
+        if missing:
+            errors.append(f"row {name} lost metric keys: {sorted(missing)}")
+
+    # deterministic prefix-cache invariants on the fresh run
+    for name, row in sorted(fresh_rows.items()):
+        if "serve_prefix_on" not in name:
+            continue
+        other = fresh_rows.get(name.replace("_on_", "_off_"))
+        if row.get("prefix_hit_rate", 0) <= 0:
+            errors.append(f"{name}: prefix cache produced no hits")
+        if other and row.get("first_token_steps", 0) > other.get("first_token_steps", 0):
+            errors.append(
+                f"{name}: cache-on first-token step count "
+                f"{row['first_token_steps']} exceeds cache-off "
+                f"{other['first_token_steps']}"
+            )
+    return errors
+
+
+def report(baseline: dict, fresh: dict) -> None:
+    base_rows = {r["name"]: r for r in baseline.get("rows", [])}
+    for r in fresh.get("rows", []):
+        base = base_rows.get(r["name"])
+        if base is None:
+            continue
+        deltas = [
+            f"{k} {r[k] / base[k] - 1.0:+.0%} vs base"
+            for k in TIMING_KEYS
+            if k in base and k in r and base[k]
+        ]
+        print(f"  {r['name']}: " + ("; ".join(deltas) or "no timing overlap"))
+
+
+def main(argv: list[str] | None = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if len(argv) != 2:
+        print(__doc__)
+        return 2
+    baseline, fresh = load(argv[0]), load(argv[1])
+    print(f"[bench-diff] {argv[1]} vs committed {argv[0]}")
+    report(baseline, fresh)
+    errors = diff(baseline, fresh)
+    for e in errors:
+        print(f"[bench-diff] FAIL: {e}")
+    if not errors:
+        n = len(fresh.get("rows", []))
+        print(f"[bench-diff] OK: {n} rows match the baseline schema")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
