@@ -24,6 +24,16 @@ Shape conventions (see docs/kernels.md):
   engine's window block rings rely on this to exclude gathered KV that is
   resident in a not-yet-freed block but already behind the window (and to
   neutralize the null-page rows left where freed-behind blocks used to be).
+
+Verify-step length masking (speculative decoding): the causal term is
+per-*row* (``j <= q_positions[b, i]``), so a multi-token verify pass over
+``[x_t, d_1..d_k]`` scores row ``i`` against exactly the first
+``q_positions[b, i] + 1`` resident tokens — never against the draft
+pass's speculatively written rows at higher positions, and never against
+stale rows a rewind left beyond the lane's position (they sit past every
+later query's position until an accepted token overwrites them).  This is
+what lets the engine rewind by table truncation alone, without zeroing
+physical pages.
 """
 
 from __future__ import annotations

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from repro import configs
 from repro.core import Topology, adapt_plan, compile_plan
 from repro.models import lm
-from repro.serve import ContinuousEngine, Engine
+from repro.serve import ContinuousEngine, Engine, SamplingParams
 
 
 def _static(args, cfg, params, key):
@@ -61,8 +61,18 @@ def _continuous(args, cfg, params, key):
                            prefix_cache=args.prefix_cache,
                            pricing=args.pricing,
                            cache_blocks=args.cache_blocks,
+                           speculate=args.speculate,
+                           draft_layers=args.draft_layers,
                            dtype=jnp.float32 if args.reduced else jnp.bfloat16,
                            plan=plan)
+    # per-request sampling: temperature 0 (default) stays bitwise greedy;
+    # the PRNG seed is --sample-seed + request id, so each request draws
+    # an independent, reproducible stream
+    sp = None
+    if args.temperature > 0:
+        sp = [SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                             top_p=args.top_p, seed=args.sample_seed + i)
+              for i in range(args.requests)]
     # staggered arrivals: request i becomes admissible at step i * stagger
     needs_fe = bool(cfg.frontend or cfg.n_enc_layers)
     shared = jax.random.randint(key, (max(0, args.shared_prefix),), 0,
@@ -78,7 +88,8 @@ def _continuous(args, cfg, params, key):
                                 (cfg.frontend_tokens, cfg.frontend_dim),
                                 jnp.float32) if needs_fe else None)
         eng.submit(prompt, max_new_tokens=args.max_new, rid=i,
-                   arrival=i * args.stagger, frontend_emb=fe)
+                   arrival=i * args.stagger, frontend_emb=fe,
+                   sampling=None if sp is None else sp[i])
     t0 = time.time()
     results = eng.run()
     dt = time.time() - t0
@@ -113,6 +124,12 @@ def _continuous(args, cfg, params, key):
               f"commits={st['commits']} evictions={st['evictions']} "
               f"cow_forks={st['cow_forks']} "
               f"peak_shared={tel.peak_shared_saved_bytes() / 1024:.0f}KiB")
+    if args.speculate:
+        print(f"[serve-cb] speculative: k={args.speculate} "
+              f"draft_layers={eng.draft_layers} "
+              f"accept_rate={tel.accept_rate():.2f} "
+              f"({tel.total_drafted()} drafted, "
+              f"{tel.total_rewound_tokens()} rows rewound)")
     if eng.scheduler.preemptions:
         print(f"[serve-cb] preemptions={eng.scheduler.preemptions} "
               f"(lazy-pricing evict-and-requeue)")
@@ -184,6 +201,25 @@ def main(argv=None):
     ap.add_argument("--cache-blocks", type=int, default=None, metavar="N",
                     help="continuous: override the self-sized block pool "
                          "(undersize it to exercise admission backpressure)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="continuous: sampling temperature (0 = exact "
+                         "greedy argmax, the default)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="continuous: keep only the k highest logits "
+                         "(0 disables)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="continuous: nucleus sampling mass (1.0 disables)")
+    ap.add_argument("--sample-seed", type=int, default=0,
+                    help="continuous: base PRNG seed for sampling (request "
+                         "i uses sample-seed + i; --seed seeds the weights)")
+    ap.add_argument("--speculate", type=int, default=0, metavar="K",
+                    help="continuous+paged: self-speculative decoding — "
+                         "draft K tokens per round with a truncated-layer "
+                         "pass, verify in one batched step, rewind the "
+                         "paged cache past the rejection point")
+    ap.add_argument("--draft-layers", type=int, default=None, metavar="L",
+                    help="--speculate: layers the draft pass runs "
+                         "(default: half the stack, whole cycles)")
     ap.add_argument("--adapt", action="store_true",
                     help="feed serve telemetry to the §3 assistants")
     ap.add_argument("--devices", type=int, default=4,

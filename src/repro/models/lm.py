@@ -380,6 +380,36 @@ def lane_merge(cfg: ModelConfig, caches: dict, updated: dict, slot) -> dict:
     return _map_entries(cfg, walk, caches, updated)
 
 
+def snapshot_state_lanes(cfg: ModelConfig, caches: dict, slot) -> dict:
+    """Copy lane ``slot``'s recurrent (ssd/rglru) state leaves out of the
+    paged tree — the pre-draft snapshot of a speculative round.  Entries
+    hold *only* the state (pool leaves are dropped), so a live snapshot
+    pins O(1) lane state and never keeps superseded pools alive.
+    ``slot`` may be traced — one compile covers all lanes."""
+    def walk(spec: LayerSpec, entry: dict) -> dict:
+        if spec.mixer in ("ssd", "rglru"):
+            return {spec.mixer: jax.tree.map(
+                lambda x: lax.dynamic_slice_in_dim(x, slot, 1, axis=1),
+                entry[spec.mixer])}
+        return {}
+
+    return _map_entries(cfg, walk, caches)
+
+
+def restore_state_lanes(cfg: ModelConfig, caches: dict, snapshot: dict,
+                        slot) -> dict:
+    """Scatter a ``snapshot_state_lanes`` capture back into lane ``slot``
+    — the recurrent-state rewind after a draft pass polluted the lane or
+    a verify pass advanced it beyond the accepted tokens."""
+    def walk(spec: LayerSpec, full: dict, snap: dict) -> dict:
+        if spec.mixer in ("ssd", "rglru"):
+            return {**full, spec.mixer: _scatter_state(full[spec.mixer],
+                                                       snap[spec.mixer], slot)}
+        return full
+
+    return _map_entries(cfg, walk, caches, snapshot)
+
+
 def write_state_lanes(cfg: ModelConfig, caches: dict, single: dict,
                       slot) -> dict:
     """Insert a single-request cache's recurrent state leaves into lane
@@ -785,7 +815,7 @@ def forward(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
             paged_tables: Optional[jax.Array] = None,
             window_tables: Optional[jax.Array] = None,
             cross_tables: Optional[jax.Array] = None,
-            valid_len=None,
+            valid_len=None, layer_cap: Optional[int] = None,
             shard_fn=None, unroll: bool = False):
     """Returns (logits, new_cache_or_None, aux_loss).
 
@@ -808,6 +838,12 @@ def forward(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
       (bucketed prefill tails, final prefill chunks); attention caches
       must not let them displace real rows and recurrent state freezes
       past them.
+    layer_cap: run only the first ``layer_cap`` decoder layers (rounded
+      *up* to whole cycle repeats within a segment, so a heterogeneous
+      cycle is never split) before the shared final norm + unembed — the
+      truncated-layer draft pass of self-speculative decoding.  Skipped
+      segments pass their cache through untouched, so the returned cache
+      tree keeps the full structure.
     """
     remat = (mode == "train") if remat is None else remat
     decode = mode == "decode"
@@ -854,10 +890,46 @@ def forward(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
     # ---- decoder segments ---------------------------------------------------------
     aux_total = jnp.zeros((), jnp.float32)
     new_cache: dict = {}
+    remaining = None if layer_cap is None else max(int(layer_cap), 1)
     for si, seg in enumerate(cfg.segments()):
         seg_cache = cache[f"seg{si}"] if cache is not None else None
+        seg_p = params[f"seg{si}"]
+        run = seg
+        if remaining is not None:
+            clen = len(seg.cycle)
+            r = min(seg.repeats, -(-remaining // clen)) if remaining > 0 else 0
+            remaining -= r * clen
+            if r == 0:  # cap reached: pass the cache through untouched
+                if seg_cache is not None:
+                    new_cache[f"seg{si}"] = seg_cache
+                continue
+            if r < seg.repeats:  # partial segment: run the first r repeats
+                take = lambda t: jax.tree.map(lambda x: x[:r], t)
+                run = Segment(seg.cycle, r)
+                seg_p = take(seg_p)
+                sub_cache = take(seg_cache) if seg_cache is not None else None
+                h, ncs, aux = _run_segment(
+                    cfg, run, seg_p, h, positions=positions,
+                    seg_cache=sub_cache, enc_out=enc_out, impl=impl,
+                    n_groups=n_groups, remat=remat,
+                    capacity_factor=capacity_factor,
+                    moe_lossless=moe_lossless, unroll=unroll,
+                    paged_tables=paged_tables, window_tables=window_tables,
+                    cross_tables=cross_tables, valid_len=valid_len,
+                    shard_fn=shard_fn)
+                h = shard_fn(h, "residual")
+                aux_total = aux_total + aux
+                if ncs is not None and seg_cache is not None:
+                    # splice the partial segment's cache back over the
+                    # untouched tail repeats
+                    new_cache[f"seg{si}"] = jax.tree.map(
+                        lambda full, part: jnp.concatenate(
+                            [part, full[r:]], axis=0), seg_cache, ncs)
+                elif ncs is not None:
+                    new_cache[f"seg{si}"] = ncs
+                continue
         h, ncs, aux = _run_segment(
-            cfg, seg, params[f"seg{si}"], h, positions=positions,
+            cfg, run, seg_p, h, positions=positions,
             seg_cache=seg_cache, enc_out=enc_out, impl=impl,
             n_groups=n_groups, remat=remat, capacity_factor=capacity_factor,
             moe_lossless=moe_lossless, unroll=unroll,

@@ -82,6 +82,11 @@ class ServeStep:
     prefix_lookup_tokens: int = 0
     shared_saved_bytes: int = 0       # bytes deduplicated right now
     cached_blocks: int = 0            # refcount-0 committed blocks resident
+    # self-speculative decoding: draft tokens proposed / accepted this
+    # step, and cache rows written then rewound after rejection
+    drafted: int = 0
+    accepted: int = 0
+    rewound_tokens: int = 0
 
 
 @dataclass
@@ -114,6 +119,9 @@ class ServeTelemetry:
         self._prefix_hit_tokens = 0
         self._prefix_lookup_tokens = 0
         self._peak_shared_saved_bytes = 0
+        self._total_drafted = 0
+        self._total_accepted = 0
+        self._total_rewound = 0
 
     def reset(self) -> None:
         """Drop all recorded steps and whole-run aggregates."""
@@ -128,6 +136,9 @@ class ServeTelemetry:
         self._prefix_hit_tokens = 0
         self._prefix_lookup_tokens = 0
         self._peak_shared_saved_bytes = 0
+        self._total_drafted = 0
+        self._total_accepted = 0
+        self._total_rewound = 0
 
     def record_step(self, step: int, seconds: float, active_slots,
                     n_slots: int, blocks_in_use: int, n_blocks: int,
@@ -138,7 +149,8 @@ class ServeTelemetry:
                     prefix_hit_tokens: int = 0,
                     prefix_lookup_tokens: int = 0,
                     shared_saved_bytes: int = 0,
-                    cached_blocks: int = 0) -> None:
+                    cached_blocks: int = 0, drafted: int = 0,
+                    accepted: int = 0, rewound_tokens: int = 0) -> None:
         self.steps.append(ServeStep(
             step=step, seconds=seconds, active_slots=tuple(active_slots),
             n_slots=n_slots, blocks_in_use=blocks_in_use, n_blocks=n_blocks,
@@ -150,7 +162,8 @@ class ServeTelemetry:
             prefix_hit_tokens=prefix_hit_tokens,
             prefix_lookup_tokens=prefix_lookup_tokens,
             shared_saved_bytes=shared_saved_bytes,
-            cached_blocks=cached_blocks))
+            cached_blocks=cached_blocks, drafted=drafted,
+            accepted=accepted, rewound_tokens=rewound_tokens))
         # chunk work units are not emitted tokens — only completed prefills
         # (one greedy token each) and decode tokens count
         self._total_tokens += new_tokens + prefills
@@ -169,6 +182,9 @@ class ServeTelemetry:
         self._prefix_lookup_tokens += prefix_lookup_tokens
         self._peak_shared_saved_bytes = max(self._peak_shared_saved_bytes,
                                             shared_saved_bytes)
+        self._total_drafted += drafted
+        self._total_accepted += accepted
+        self._total_rewound += rewound_tokens
 
     # -- aggregates -----------------------------------------------------------
     def _recent(self) -> list:
@@ -235,6 +251,23 @@ class ServeTelemetry:
     def peak_shared_saved_bytes(self) -> int:
         """Peak physical bytes deduplicated by prefix-block sharing."""
         return self._peak_shared_saved_bytes
+
+    def accept_rate(self) -> float:
+        """Fraction of drafted speculative tokens the verify pass accepted
+        over the whole run (0 when speculation is off) — the §3 assistant
+        loop's signal for tuning the draft depth."""
+        if not self._total_drafted:
+            return 0.0
+        return self._total_accepted / self._total_drafted
+
+    def total_drafted(self) -> int:
+        return self._total_drafted
+
+    def total_rewound_tokens(self) -> int:
+        """Whole-run count of cache rows written by a draft/verify pass and
+        then rewound after rejection (block-tail truncation + window-ring
+        rollback + recurrent-state restore)."""
+        return self._total_rewound
 
     def tokens_per_sec(self) -> float:
         if self._busy_seconds <= 0:

@@ -600,6 +600,58 @@ class BlockAllocator:
         self._group_in_use["window"] += len(fresh)
         return fresh, freed
 
+    def truncate(self, slot: int, n_tokens_total: int) -> list[int]:
+        """Shrink ``slot``'s global table to cover ``n_tokens_total``
+        resident tokens — the speculative-decode rewind path for rejected
+        draft tokens.  Frees whole tail blocks only; a partially-vacated
+        tail block stays claimed (its stale rows sit beyond the slot's
+        position, so the attention mask never reads them and the next
+        accepted token overwrites them).  Returns the freed physical ids.
+
+        Rewinding must never touch content visible beyond the slot: a
+        shared or prefix-indexed block in the dropped tail is an
+        ``AllocatorInvariantError`` (decode tails are always private —
+        admission CoW forks the boundary block before the first decode
+        write, and rewind never reaches back into the committed prompt)."""
+        if slot not in self.tables:
+            raise AllocatorInvariantError(f"slot {slot} has no allocation")
+        if n_tokens_total > self._tokens[slot]:
+            raise AllocatorInvariantError(
+                f"slot {slot}: truncate cannot grow "
+                f"{self._tokens[slot]} -> {n_tokens_total}")
+        table = self.tables[slot]
+        keep = self.config.blocks_for(n_tokens_total) if self.layout.has_global \
+            else len(table)
+        for idx in range(keep, len(table)):
+            if self.is_block_shared(slot, idx):
+                raise AllocatorInvariantError(
+                    f"slot {slot}: rewind would drop shared/indexed block "
+                    f"{table[idx]} (table entry {idx})")
+        freed = table[keep:]
+        del table[keep:]
+        # reversed: freed tail blocks re-enter the LIFO free list so the
+        # next growth reclaims them first, in table order
+        for block in reversed(freed):
+            self._release(block)
+        self._tokens[slot] = n_tokens_total
+        return freed
+
+    def truncate_window(self, slot: int, n_tokens_total: int) -> list[int]:
+        """Rewind ``slot``'s window ring: free ring blocks whose logical
+        index lies wholly beyond position ``n_tokens_total - 1``.  The low
+        edge is untouched — the speculative round slides it with
+        ``first_query_pos`` pinned at the pre-draft position, so every
+        block a post-rewind query can attend is still resident.  Returns
+        the freed physical ids."""
+        if slot not in self.window_tables:
+            raise AllocatorInvariantError(f"slot {slot} has no window ring")
+        ring = self.window_tables[slot]
+        hi = (n_tokens_total - 1) // self.config.block_size
+        freed = [ring.pop(i) for i in sorted(ring, reverse=True) if i > hi]
+        self._free.extend(freed)
+        self._group_in_use["window"] -= len(freed)
+        return freed
+
     def free_slot(self, slot: int) -> int:
         """Reclaim every group's resources owned by ``slot`` (EOS /
         max-tokens).  Global-table entries are *released* (refcount

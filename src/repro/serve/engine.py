@@ -51,6 +51,7 @@ as precomputed embeddings.
 
 from __future__ import annotations
 
+import math
 import time
 from dataclasses import dataclass, field
 from typing import Optional
@@ -64,8 +65,10 @@ from repro.models import lm
 from repro.models.config import ModelConfig, ShapeConfig
 from repro.runtime.telemetry import ServeTelemetry
 
+from . import sampling as sampling_mod
 from .cache import (BlockAllocator, CacheConfig, CacheExhausted, CacheLayout,
                     PagedKVStore)
+from .sampling import GREEDY, SamplingParams
 from .scheduler import ActiveSlot, Request, SlotScheduler
 
 PREFILL_BUCKET_FLOOR = 8
@@ -75,6 +78,20 @@ def bucket_length(n: int, cap: int, floor: int = PREFILL_BUCKET_FLOOR) -> int:
     """Smallest power-of-two bucket >= n (>= floor), clamped to cap."""
     b = max(floor, 1 << max(0, (n - 1).bit_length()))
     return min(max(b, n), cap)
+
+
+def _pick_token(row: jax.Array, sample_args) -> jax.Array:
+    """Next token from ``[B, vocab]`` last-position logits: the fused
+    greedy argmax when ``sample_args`` is None (the historical path, and
+    the ``Engine`` oracle), else the per-request sample —
+    ``sample_args = (key, temperature, top_k, top_p)`` scalars for the
+    B == 1 single-lane prefill paths.  The sampler selects the argmax
+    **bitwise** at temperature 0, so passing sample_args never perturbs
+    greedy identity."""
+    if sample_args is None:
+        return jnp.argmax(row, axis=-1).astype(jnp.int32)
+    key, temp, topk, topp = sample_args
+    return sampling_mod.sample_token(row[0], key, temp, topk, topp)[None]
 
 
 def make_prefill_step(cfg: ModelConfig, impl: str = "chunked",
@@ -87,13 +104,13 @@ def make_prefill_step(cfg: ModelConfig, impl: str = "chunked",
     contract.  The dry-run cells keep the default (dropped) capacity —
     lossless dispatch buffers would distort the 32k-prompt memory
     analysis."""
-    def prefill_step(params, cache, tokens, frontend_emb=None):
+    def prefill_step(params, cache, tokens, frontend_emb=None,
+                     sample_args=None):
         logits, new_cache, _ = lm.forward(
             cfg, params, tokens, frontend_emb=frontend_emb, cache=cache,
             mode="prefill", impl=impl, n_groups=n_groups, shard_fn=shard_fn,
             moe_lossless=moe_lossless, unroll=unroll)
-        next_tok = jnp.argmax(logits[:, -1, :cfg.vocab_size],
-                              axis=-1).astype(jnp.int32)
+        next_tok = _pick_token(logits[:, -1, :cfg.vocab_size], sample_args)
         return next_tok, new_cache
     return prefill_step
 
@@ -101,12 +118,11 @@ def make_prefill_step(cfg: ModelConfig, impl: str = "chunked",
 def make_serve_step(cfg: ModelConfig, impl: str = "chunked",
                     n_groups: int = 1, shard_fn=None, unroll: bool = False):
     """decode_step(params, cache, tokens [B,1], pos) -> (next_tok, cache)."""
-    def serve_step(params, cache, tokens, pos):
+    def serve_step(params, cache, tokens, pos, sample_args=None):
         logits, new_cache, _ = lm.forward(
             cfg, params, tokens, positions=pos, cache=cache, mode="decode",
             impl=impl, n_groups=n_groups, shard_fn=shard_fn, unroll=unroll)
-        next_tok = jnp.argmax(logits[:, -1, :cfg.vocab_size],
-                              axis=-1).astype(jnp.int32)
+        next_tok = _pick_token(logits[:, -1, :cfg.vocab_size], sample_args)
         return next_tok, new_cache
     return serve_step
 
@@ -129,15 +145,15 @@ def make_bucketed_prefill_step(cfg: ModelConfig, impl: str = "chunked"):
     """
     F = cfg.frontend_tokens if (cfg.frontend and not cfg.n_enc_layers) else 0
 
-    def prefill_step(params, cache, tokens, true_len, frontend_emb=None):
+    def prefill_step(params, cache, tokens, true_len, frontend_emb=None,
+                     sample_args=None):
         logits, new_cache, _ = lm.forward(
             cfg, params, tokens, frontend_emb=frontend_emb, cache=cache,
             mode="prefill", impl=impl, moe_lossless=True,
             valid_len=true_len + F)
         last = lax.dynamic_index_in_dim(logits, F + true_len - 1, axis=1,
                                         keepdims=False)
-        next_tok = jnp.argmax(last[:, :cfg.vocab_size],
-                              axis=-1).astype(jnp.int32)
+        next_tok = _pick_token(last[:, :cfg.vocab_size], sample_args)
         return next_tok, lm.mask_cache_positions(new_cache, true_len + F)
     return prefill_step
 
@@ -148,16 +164,27 @@ def make_paged_decode_step(cfg: ModelConfig, impl: str = "chunked"):
     lane; each lane writes its token's rows through its group tables into
     the shared pools.  ``active`` masks the recurrent state update to the
     lanes actually decoding — inactive lanes (retired, or mid chunked
-    prefill with carried state) must not absorb their garbage tokens."""
-    def decode_step(params, caches, toks, pos, tables, active):
+    prefill with carried state) must not absorb their garbage tokens.
+    ``sample_args = (base_keys [B,2], temperature [B], top_k [B],
+    top_p [B])`` turns the fused argmax into the per-lane sampler (the
+    token decided this step sits at ``pos + 1``, which derives its key);
+    greedy lanes (temperature 0) still take the argmax bitwise."""
+    def decode_step(params, caches, toks, pos, tables, active,
+                    sample_args=None):
         logits, new_cache, _ = lm.forward(
             cfg, params, toks[:, None], positions=pos, cache=caches,
             mode="decode", impl=impl, paged_tables=tables.get("global"),
             window_tables=tables.get("window"),
             cross_tables=tables.get("cross"))
         new_cache = lm.freeze_state_lanes(cfg, new_cache, caches, active)
-        next_tok = jnp.argmax(logits[:, -1, :cfg.vocab_size],
-                              axis=-1).astype(jnp.int32)
+        row = logits[:, -1, :cfg.vocab_size]
+        if sample_args is None:
+            next_tok = jnp.argmax(row, axis=-1).astype(jnp.int32)
+        else:
+            keys, temp, topk, topp = sample_args
+            tkeys = jax.vmap(lambda k, p: sampling_mod.token_key(k, p))(
+                keys, pos + 1)
+            next_tok = sampling_mod.sample_lanes(row, tkeys, temp, topk, topp)
         return next_tok, new_cache
     return decode_step
 
@@ -185,7 +212,7 @@ def make_chunk_prefill_step(cfg: ModelConfig, chunk: int,
     then straddle the frontend/token boundary.
     """
     def chunk_step(params, caches, piece, start, rows, last_idx, slot,
-                   valid):
+                   valid, sample_args=None):
         positions = start + jnp.arange(chunk, dtype=jnp.int32)
         g_row = rows.get("global")
         w_row = rows.get("window")
@@ -203,9 +230,86 @@ def make_chunk_prefill_step(cfg: ModelConfig, chunk: int,
         caches = lm.lane_merge(cfg, caches, new_sub, slot)
         last = lax.dynamic_index_in_dim(logits, last_idx, axis=1,
                                         keepdims=False)
-        tok = jnp.argmax(last[:, :cfg.vocab_size], axis=-1).astype(jnp.int32)
+        tok = _pick_token(last[:, :cfg.vocab_size], sample_args)
         return tok, caches
     return chunk_step
+
+
+def make_draft_decode_step(cfg: ModelConfig, draft_layers: int,
+                           impl: str = "chunked"):
+    """draft(params, caches, tok, pos, rows {group: [W]}, slot, key, temp,
+    topk, topp) -> (next_tok, draft_probs [vocab], caches).
+
+    One truncated-layer (``layer_cap=draft_layers``) decode step for a
+    single lane — the self-speculative draft pass.  The draft token's K/V
+    rows land through the lane's group tables exactly where the verify
+    pass will rewrite them (a rejected row sits beyond the lane's rewound
+    position, so the attention mask never reads it before the next
+    accepted token overwrites it); the lane's recurrent state advances and
+    is snapshot/restored by the engine around the whole draft window.
+    Returns the post-filter draft distribution — the ``q`` of the
+    rejection-sampling acceptance rule."""
+    def draft_step(params, caches, tok, pos, rows, slot, key, temp, topk,
+                   topp):
+        g_row = rows.get("global")
+        w_row = rows.get("window")
+        x_row = rows.get("cross")
+        sub = lm.lane_view(cfg, caches, slot)
+        logits, new_sub, _ = lm.forward(
+            cfg, params, tok.reshape(1, 1), positions=pos.reshape(1),
+            cache=sub, mode="decode", impl=impl,
+            paged_tables=None if g_row is None else g_row[None],
+            window_tables=None if w_row is None else w_row[None],
+            cross_tables=None if x_row is None else x_row[None],
+            layer_cap=draft_layers)
+        caches = lm.lane_merge(cfg, caches, new_sub, slot)
+        row = logits[0, -1, :cfg.vocab_size]
+        nxt = sampling_mod.sample_token(row, key, temp, topk, topp)
+        return nxt, sampling_mod.sampling_probs(row, temp, topk, topp), caches
+    return draft_step
+
+
+def make_verify_step(cfg: ModelConfig, width: int, impl: str = "chunked"):
+    """verify(params, caches, toks [width], start, rows, slot, valid) ->
+    (logits [width, vocab], caches).
+
+    One chunk-shaped full-model pass over ``[x_t, d_1..d_k]`` (padded to
+    the static ``width = speculate + 1``) against the paged tree — the
+    verification step of self-speculative decoding: all k drafts are
+    scored in a single batched step through the existing paged kernel
+    path.  Row ``i``'s logits are the full model's distribution for draft
+    slot ``i`` (row ``k`` the bonus token).  ``valid = k + 1`` masks the
+    pad tail: recurrent state freezes past it and pad-row K/V writes land
+    beyond the lane's position, where the per-query causal mask
+    (``j <= q_position``) keeps them invisible until overwritten."""
+    use_embeds = bool(cfg.frontend and not cfg.n_enc_layers)
+
+    def verify_step(params, caches, toks, start, rows, slot, valid):
+        positions = start + jnp.arange(width, dtype=jnp.int32)
+        g_row = rows.get("global")
+        w_row = rows.get("window")
+        x_row = rows.get("cross")
+        sub = lm.lane_view(cfg, caches, slot)
+        embeds = None
+        tokens = toks[None]
+        if use_embeds:
+            # a VLM's prefill path embeds explicitly (its frontend rows
+            # are long resident by decode time — verify rows are plain
+            # tokens, embedded exactly as forward's own token branch)
+            h = jnp.take(params["embed"], toks, axis=0)
+            if cfg.emb_scale:
+                h = h * jnp.asarray(math.sqrt(cfg.d_model), h.dtype)
+            embeds, tokens = h[None], None
+        logits, new_sub, _ = lm.forward(
+            cfg, params, tokens, input_embeds=embeds, positions=positions,
+            cache=sub, mode="prefill", impl=impl,
+            paged_tables=None if g_row is None else g_row[None],
+            window_tables=None if w_row is None else w_row[None],
+            cross_tables=None if x_row is None else x_row[None],
+            moe_lossless=True, valid_len=valid)
+        caches = lm.lane_merge(cfg, caches, new_sub, slot)
+        return logits[0, :, :cfg.vocab_size], caches
+    return verify_step
 
 
 @dataclass
@@ -302,6 +406,14 @@ class ContinuousEngine:
     prefix_cache: bool = False
     pricing: str = "worst"
     cache_blocks: Optional[int] = None
+    # self-speculative decoding (paged only): draft up to ``speculate``
+    # tokens per lane per step with a truncated-layer pass
+    # (``draft_layers``, default half the stack rounded up to whole scan
+    # cycles), verify them in one chunk-shaped step through the paged
+    # kernel, accept by rejection sampling (token-identical to the oracle
+    # under greedy), and rewind the paged cache past the accepted window
+    speculate: int = 0
+    draft_layers: Optional[int] = None
     telemetry: Optional[ServeTelemetry] = None
     # optional compiled-plan artifact (repro.core.plan.CompiledPlan): sizes
     # the cache length and lane count from the planned decode shape instead
@@ -355,6 +467,15 @@ class ContinuousEngine:
             if reason is not None:
                 raise ValueError(f"{self.cfg.name}: prefix cache "
                                  f"unavailable — {reason}")
+        if self.speculate < 0:
+            raise ValueError("speculate must be >= 0")
+        if self.speculate and not self.paged:
+            raise ValueError("speculate requires paged=True (the rewind "
+                             "path truncates block tables and window rings)")
+        if self.draft_layers is None:
+            self.draft_layers = max(1, self.cfg.n_layers // 2)
+        elif self.draft_layers < 1:
+            raise ValueError("draft_layers must be >= 1")
         groups = lm.serve_groups(self.cfg)
         self._has_global = bool(groups["paged"])
         self._has_window = bool(groups["window"])
@@ -414,6 +535,15 @@ class ContinuousEngine:
         self._fresh = lm.init_cache(self.cfg, 1, self._kv_total, self.dtype)
         self._toks = jnp.zeros((self.n_slots,), jnp.int32)
         self._pos = jnp.zeros((self.n_slots,), jnp.int32)
+        # per-lane sampling state, refreshed at admission: base PRNG keys
+        # plus the vectorized (temperature, top_k, top_p) lanes the decode
+        # steps sample with (greedy defaults keep the argmax bitwise)
+        self._skeys = jnp.zeros((self.n_slots, 2), jnp.uint32)
+        self._temp = jnp.zeros((self.n_slots,), jnp.float32)
+        self._topk = jnp.zeros((self.n_slots,), jnp.int32)
+        self._topp = jnp.ones((self.n_slots,), jnp.float32)
+        self._samp: dict[int, SamplingParams] = {}
+        self._skey_host: dict[int, jax.Array] = {}
         self._now = 0
         self._rids: set = set()
         # slot -> [prompt tokens/rows, chunks done, skip] while
@@ -428,12 +558,16 @@ class ContinuousEngine:
         else:
             serve_step = make_serve_step(self.cfg, self.impl)
 
-            def lane_decode(params, cache, tok, pos):
-                nt, nc = serve_step(params, cache, tok.reshape(1, 1), pos)
+            def lane_decode(params, cache, tok, pos, key, temp, topk, topp):
+                # the token decided this step sits at pos + 1 — that
+                # position derives its per-request key
+                tkey = sampling_mod.token_key(key, pos + 1)
+                nt, nc = serve_step(params, cache, tok.reshape(1, 1), pos,
+                                    (tkey, temp, topk, topp))
                 return nt[0], nc
 
-            self._decode = jax.jit(jax.vmap(lane_decode,
-                                            in_axes=(None, 0, 0, 0)))
+            self._decode = jax.jit(jax.vmap(
+                lane_decode, in_axes=(None, 0, 0, 0, 0, 0, 0, 0)))
 
             # one fused dispatch per admission: lane insert + token/pos scatter
             def admit_update(caches, single, toks, pos, slot, tok, start_pos):
@@ -555,6 +689,23 @@ class ContinuousEngine:
 
         self._reset_state = jax.jit(reset_state)
 
+        if self.speculate:
+            self._draft_step = jax.jit(make_draft_decode_step(
+                self.cfg, self.draft_layers, self.impl))
+            self._verify_step = jax.jit(make_verify_step(
+                self.cfg, self.speculate + 1, self.impl))
+            self._accept = jax.jit(sampling_mod.speculative_accept)
+            if self._has_state:
+                def snapshot(caches, slot):
+                    return lm.snapshot_state_lanes(self.cfg, caches, slot)
+
+                def restore(caches, snap, slot):
+                    return lm.restore_state_lanes(self.cfg, caches, snap,
+                                                  slot)
+
+                self._snapshot = jax.jit(snapshot)
+                self._restore = jax.jit(restore)
+
         if self._has_cross:
             # encode-at-admission for the chunked path: the encoder runs
             # once per request and its projected cross K/V is scattered
@@ -594,14 +745,20 @@ class ContinuousEngine:
     # -- intake -----------------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int, *, rid=None,
                arrival: int = 0, eos_id: Optional[int] = None,
-               frontend_emb=None) -> object:
+               frontend_emb=None,
+               sampling: Optional[SamplingParams] = None) -> object:
         """Queue a request; returns its id. ``prompt`` is a 1-D token id
         sequence; ``arrival`` is the engine step at which it becomes
         admissible (0 = immediately).  VLM / enc-dec configs require
         ``frontend_emb`` — the request's precomputed stub embeddings of
         shape [frontend_tokens, frontend_dim] (encoded / projected once at
-        admission)."""
+        admission).  ``sampling`` carries the request's per-lane sampling
+        configuration (temperature / top-k / top-p / seed); None is exact
+        greedy, bitwise identical to the pre-sampling engine."""
         prompt = [int(t) for t in prompt]
+        if sampling is not None and not isinstance(sampling, SamplingParams):
+            raise ValueError(
+                f"sampling must be a SamplingParams, got {type(sampling)}")
         needs_fe = bool(self.cfg.frontend or self.cfg.n_enc_layers)
         if needs_fe:
             if frontend_emb is None:
@@ -631,7 +788,8 @@ class ContinuousEngine:
                                       max_new_tokens=max_new_tokens,
                                       arrival=arrival, eos_id=eos_id,
                                       frontend_emb=frontend_emb,
-                                      block_hashes=hashes))
+                                      block_hashes=hashes,
+                                      sampling=sampling))
         self._rids.add(rid)          # only after validation succeeded
         return rid
 
@@ -643,19 +801,46 @@ class ContinuousEngine:
         fns = [self._prefill, self._prefill_b, getattr(self, "_chunk", None)]
         return sum(f._cache_size() for f in fns if f is not None)
 
-    def _full_prefill(self, prompt_len: int, prompt, frontend_emb) -> tuple:
+    def _full_prefill(self, prompt_len: int, prompt, frontend_emb,
+                      sample_args) -> tuple:
         """Whole-prompt prefill into the dense scratch cache; returns
         (first token [1], populated single-request cache).
         ``frontend_emb`` is the request's [1, F, frontend_dim] embeddings
-        (None for decoder-only archs)."""
+        (None for decoder-only archs); ``sample_args`` the lane's
+        first-token sampling scalars (argmax-bitwise for greedy lanes)."""
         if self.bucket_prompts:
             sb = bucket_length(prompt_len, self.kv_len)
             padded = jnp.zeros((1, sb), jnp.int32).at[0, :prompt_len].set(prompt)
             return self._prefill_b(self.params, self._fresh, padded,
                                    jnp.asarray(prompt_len, jnp.int32),
-                                   frontend_emb)
+                                   frontend_emb, sample_args)
         return self._prefill(self.params, self._fresh, prompt[None],
-                             frontend_emb)
+                             frontend_emb, sample_args)
+
+    def _set_lane_sampling(self, slot: int, act: ActiveSlot) -> None:
+        """Publish the admitted request's sampling configuration to lane
+        ``slot``: host-side params + base key for the per-lane speculative
+        path, and the vectorized per-slot arrays the batched decode steps
+        consume."""
+        sp = act.request.sampling or GREEDY
+        base = sp.base_key()
+        self._samp[slot] = sp
+        self._skey_host[slot] = base
+        self._skeys = self._skeys.at[slot].set(base)
+        self._temp = self._temp.at[slot].set(sp.temperature)
+        self._topk = self._topk.at[slot].set(sp.top_k)
+        self._topp = self._topp.at[slot].set(sp.top_p)
+
+    def _first_token_args(self, slot: int, position: int) -> tuple:
+        """Sampling scalars for the token a prefill emits at cache
+        ``position`` (the key depends only on seed + position, so chunked,
+        bucketed and whole prefills of the same request draw the same
+        token)."""
+        sp = self._samp[slot]
+        return (sampling_mod.token_key(self._skey_host[slot], position),
+                jnp.asarray(sp.temperature, jnp.float32),
+                jnp.asarray(sp.top_k, jnp.int32),
+                jnp.asarray(sp.top_p, jnp.float32))
 
     def _refresh_row(self, slot: int, group: str) -> jax.Array:
         """Rebuild ``slot``'s published table row for ``group`` from the
@@ -689,8 +874,10 @@ class ContinuousEngine:
         # the decode lane starts past everything resident: the prompt,
         # plus a VLM frontend's projected rows ahead of it
         start_pos = self._frontend_extra + prompt_len
+        self._set_lane_sampling(slot, act)
+        sargs = self._first_token_args(slot, start_pos)
         if not self.paged:
-            tok, cache = self._full_prefill(prompt_len, prompt, fe1)
+            tok, cache = self._full_prefill(prompt_len, prompt, fe1, sargs)
             self._caches, self._toks, self._pos = self._insert(
                 self._caches, cache, self._toks, self._pos,
                 jnp.asarray(slot, jnp.int32), tok[0],
@@ -745,7 +932,7 @@ class ContinuousEngine:
         # whole-prompt prefill recomputes everything (memory sharing only:
         # the insert masks writes below ``skip`` so shared blocks stay
         # read-only); the chunked path above also skips the *compute*
-        tok, cache = self._full_prefill(prompt_len, prompt, fe1)
+        tok, cache = self._full_prefill(prompt_len, prompt, fe1, sargs)
         self._caches = self._insert_p(self._caches, cache, self._rows[slot],
                                       jnp.asarray(slot, jnp.int32),
                                       jnp.asarray(skip, jnp.int32))
@@ -781,7 +968,8 @@ class ContinuousEngine:
             self.params, self._caches, piece[None],
             jnp.asarray(start, jnp.int32), self._rows[slot],
             jnp.asarray(min(max(last, 0), C - 1), jnp.int32),
-            jnp.asarray(slot, jnp.int32), jnp.asarray(valid, jnp.int32))
+            jnp.asarray(slot, jnp.int32), jnp.asarray(valid, jnp.int32),
+            self._first_token_args(slot, total))
         self._prefilling[slot][1] = done + 1
         if start + C < total:
             return False
@@ -798,6 +986,8 @@ class ContinuousEngine:
         """Retire ``slot`` (reclaims blocks and its recurrent state slot;
         paged: unmap its table rows)."""
         act = self.scheduler.finish(slot)
+        self._samp.pop(slot, None)
+        self._skey_host.pop(slot, None)
         if self.paged:
             for group in self._tables:
                 self._tables[group] = self._tables[group].at[slot].set(
@@ -846,12 +1036,116 @@ class ContinuousEngine:
         table rows so the decode step cannot touch freed pages."""
         self.scheduler.preempt(slot)
         self._prefilling.pop(slot, None)
+        self._samp.pop(slot, None)
+        self._skey_host.pop(slot, None)
         if self.paged:
             for group in self._tables:
                 self._tables[group] = self._tables[group].at[slot].set(
                     self._null_rows[group])
             self._rows.pop(slot, None)
             self._host_pos.pop(slot, None)
+
+    def _speculative_round(self, slot: int) -> Optional[tuple]:
+        """One self-speculative round for decode lane ``slot``.
+
+        Protocol (docs/serving.md §sampling): grow the lane's tables to
+        cover the draft window; snapshot its recurrent state; draft up to
+        ``speculate`` tokens with the truncated-layer step (each lands its
+        K/V through the lane's tables); restore the state and verify all
+        drafts in one chunk-shaped full-model step; accept by rejection
+        sampling (exact argmax agreement under greedy); then rewind —
+        truncate the block-table tail and window ring past the accepted
+        window and, on partial acceptance, restore the state snapshot
+        again and settle it with a ``valid = accepted + 1`` pass.
+
+        Returns ``(emitted tokens, n_drafted, n_accepted)``, or None when
+        the lane itself was preempted while growing its tables (lazy
+        pricing)."""
+        act = self.scheduler.active[slot]
+        sp = self._samp[slot]
+        pos = self._host_pos[slot]
+        budget = act.request.max_new_tokens - len(act.tokens)
+        k_r = max(0, min(self.speculate, budget - 1,
+                         self._kv_total - pos - 1))
+        while True:
+            try:
+                if self._has_global and self.allocator.extend(
+                        slot, pos + k_r + 1):
+                    self._refresh_row(slot, "global")
+                if self._has_window:
+                    fresh, freed = self.allocator.extend_window(
+                        slot, pos + k_r + 1, first_query_pos=pos)
+                    if fresh or freed:
+                        self._refresh_row(slot, "window")
+                break
+            except CacheExhausted:
+                victim = self._pick_victim()
+                if victim is None:
+                    raise
+                self._preempt(victim)
+                if victim == slot:
+                    return None
+        rows = self._rows[slot]
+        slot_arr = jnp.asarray(slot, jnp.int32)
+        base = self._skey_host[slot]
+        temp = jnp.asarray(sp.temperature, jnp.float32)
+        topk = jnp.asarray(sp.top_k, jnp.int32)
+        topp = jnp.asarray(sp.top_p, jnp.float32)
+        snap = None
+        if self._has_state and k_r:
+            snap = self._snapshot(self._caches, slot_arr)
+        draft_toks: list[int] = []
+        draft_probs: list[jax.Array] = []
+        tok = jnp.asarray(act.tokens[-1], jnp.int32)
+        for i in range(k_r):
+            dkey = sampling_mod.token_key(base, pos + i + 1,
+                                          sampling_mod.STREAM_DRAFT)
+            tok, q, self._caches = self._draft_step(
+                self.params, self._caches, tok,
+                jnp.asarray(pos + i, jnp.int32), rows, slot_arr, dkey,
+                temp, topk, topp)
+            draft_toks.append(int(tok))
+            draft_probs.append(q)
+        if snap is not None:
+            # the draft advanced the lane's recurrent state k_r tokens;
+            # the verify pass must start from the pre-draft state
+            self._caches = self._restore(self._caches, snap, slot_arr)
+        width = self.speculate + 1
+        toks_arr = np.zeros((width,), np.int32)
+        toks_arr[0] = act.tokens[-1]
+        toks_arr[1:1 + k_r] = draft_toks
+        logits, self._caches = self._verify_step(
+            self.params, self._caches, jnp.asarray(toks_arr),
+            jnp.asarray(pos, jnp.int32), rows, slot_arr,
+            jnp.asarray(k_r + 1, jnp.int32))
+        pad = [jnp.zeros((self.cfg.vocab_size,), jnp.float32)] \
+            * (self.speculate - k_r)
+        akey = sampling_mod.token_key(base, pos + 1,
+                                      sampling_mod.STREAM_ACCEPT)
+        n_acc, nxt = self._accept(
+            logits, jnp.stack(draft_probs + pad),
+            jnp.asarray(np.pad(np.asarray(draft_toks, np.int32),
+                               (0, self.speculate - k_r))),
+            jnp.asarray(k_r, jnp.int32), akey, temp, topk, topp)
+        a, e = int(n_acc), int(nxt)
+        if snap is not None and a < k_r:
+            # partial acceptance: the verify pass advanced the state over
+            # all k_r + 1 rows — re-run it from the snapshot with only the
+            # accepted rows valid to settle the exact post-accept state
+            self._caches = self._restore(self._caches, snap, slot_arr)
+            _, self._caches = self._verify_step(
+                self.params, self._caches, jnp.asarray(toks_arr),
+                jnp.asarray(pos, jnp.int32), rows, slot_arr,
+                jnp.asarray(a + 1, jnp.int32))
+        final_res = pos + a + 1
+        if a < k_r:
+            if self._has_global and self.allocator.truncate(slot, final_res):
+                self._refresh_row(slot, "global")
+            if self._has_window and self.allocator.truncate_window(
+                    slot, final_res):
+                self._refresh_row(slot, "window")
+        self._host_pos[slot] = final_res
+        return draft_toks[:a] + [e], k_r, a
 
     def run(self, max_steps: Optional[int] = None) -> dict:
         """Serve every queued request to completion. Returns
@@ -913,6 +1207,38 @@ class ContinuousEngine:
                 self._now = max(now + 1, nxt)  # idle: jump to next arrival
                 continue
 
+            if self.paged and self.speculate:
+                # self-speculative decode: one per-lane round per step —
+                # draft, verify in one batched chunk-shaped step, accept,
+                # rewind (growth happens inside the round, per lane)
+                drafted = accepted = rewound = new_tokens = 0
+                ran = []
+                for slot in decoding:
+                    act = self.scheduler.active.get(slot)
+                    if act is None:
+                        continue       # preempted by an earlier round
+                    out = self._speculative_round(slot)
+                    if out is None:
+                        continue       # the lane itself was preempted
+                    ran.append(slot)
+                    emitted, k_r, a = out
+                    drafted += k_r
+                    accepted += a
+                    rewound += k_r - a
+                    for t in emitted:
+                        act.tokens.append(t)
+                        new_tokens += 1
+                        if act.is_finished():
+                            break      # EOS inside the accepted window
+                    if act.is_finished():
+                        results[act.request.rid] = self._finish(slot)
+                self._record_step(now, t0, ran, prefills, chunks,
+                                  new_tokens, drafted=drafted,
+                                  accepted=accepted, rewound=rewound)
+                self._now = now + 1
+                steps += 1
+                continue
+
             if self.paged:
                 while True:
                     try:
@@ -936,10 +1262,12 @@ class ContinuousEngine:
                 active[decoding] = True
                 toks, self._caches = self._decode_p(
                     self.params, self._caches, self._toks, self._pos,
-                    self._tables, jnp.asarray(active))
+                    self._tables, jnp.asarray(active),
+                    (self._skeys, self._temp, self._topk, self._topp))
             else:
-                toks, self._caches = self._decode(self.params, self._caches,
-                                                  self._toks, self._pos)
+                toks, self._caches = self._decode(
+                    self.params, self._caches, self._toks, self._pos,
+                    self._skeys, self._temp, self._topk, self._topp)
             self._toks = toks
             self._pos = self._pos + 1
             toks_host = np.asarray(toks)       # one device->host transfer
@@ -982,7 +1310,8 @@ class ContinuousEngine:
         return results
 
     def _record_step(self, now: int, t0: float, active_slots, prefills: int,
-                     chunks: int, new_tokens: int) -> None:
+                     chunks: int, new_tokens: int, drafted: int = 0,
+                     accepted: int = 0, rewound: int = 0) -> None:
         by_group = self.allocator.resident_bytes_by_group()
         # per-step deltas of the cumulative ledgers
         stats = self.allocator.stats
@@ -1003,4 +1332,5 @@ class ContinuousEngine:
             prefix_hit_tokens=cur[1] - prev[1],
             prefix_lookup_tokens=cur[2] - prev[2],
             shared_saved_bytes=self.allocator.shared_saved_bytes(),
-            cached_blocks=self.allocator.cached_blocks())
+            cached_blocks=self.allocator.cached_blocks(),
+            drafted=drafted, accepted=accepted, rewound_tokens=rewound)

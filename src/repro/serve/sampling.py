@@ -1,0 +1,193 @@
+"""Vectorized per-lane sampling and speculative acceptance.
+
+The sampler is the identity-preserving generalization of the engines'
+fused greedy argmax: at ``temperature == 0`` every function below selects
+the plain ``jnp.argmax`` result through a ``jnp.where``, so greedy decode
+stays **bitwise** identical to the pre-sampling engines (the arch-matrix
+oracle bar).  At ``temperature > 0`` logits are scaled, masked to the
+top-k / top-p (nucleus) support set, and sampled with a per-request PRNG
+stream.
+
+Seed semantics
+--------------
+Each request carries a :class:`SamplingParams` whose ``seed`` derives a
+base key; the key used for the token emitted at absolute cache position
+``P`` is ``fold_in(fold_in(base, P), stream)``.  Keys therefore depend
+only on (seed, position, stream) — never on batch composition, prefill
+mode, or wall clock — which is what makes sampled decode bitwise equal
+between a lane running alone and the same lane batched with others, and
+reproducible run-to-run.  Distinct streams keep the draft pass, the
+verify/accept coin flips, and ordinary sampling statistically
+independent at the same position.
+
+Speculative acceptance
+----------------------
+``speculative_accept`` implements standard rejection sampling over the
+*post-filter* distributions: draft token ``d_i`` (drawn from the
+truncated-layer model's distribution ``q_i``) is accepted with
+probability ``min(1, p_i(d_i) / q_i(d_i))`` against the full model's
+``p_i``; the first rejection is replaced by a draw from the residual
+``normalize(max(p_i - q_i, 0))``, and a fully-accepted window earns the
+bonus token from ``p_{k+1}``.  The emitted sequence is therefore
+distribution-identical to sampling from the full model token by token.
+Greedy is handled as an exact-argmax branch (accept while the draft
+matches the full model's argmax) so speculation stays token-identical to
+the oracle rather than merely almost-surely identical.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+# PRNG stream tags (third fold_in argument): one stream per independent
+# consumer of randomness at the same cache position.
+STREAM_SAMPLE = 0   # ordinary (non-speculative) sampling
+STREAM_DRAFT = 1    # truncated-layer draft sampling
+STREAM_ACCEPT = 2   # accept/reject uniforms + residual resample
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling configuration carried on ``Request``.
+
+    ``temperature == 0`` is exact greedy (argmax), regardless of
+    ``top_k``/``top_p``.  ``top_k == 0`` and ``top_p == 1.0`` disable the
+    respective filters.
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+
+    @property
+    def is_greedy(self) -> bool:
+        return self.temperature == 0.0
+
+    def base_key(self) -> jax.Array:
+        return jax.random.PRNGKey(self.seed)
+
+
+GREEDY = SamplingParams()
+
+
+def token_key(base_key: jax.Array, position, stream=STREAM_SAMPLE) -> jax.Array:
+    """PRNG key for the token decided at absolute cache position ``position``."""
+    return jax.random.fold_in(jax.random.fold_in(base_key, position), stream)
+
+
+def filter_logits(logits: jax.Array, top_k, top_p) -> jax.Array:
+    """Mask ``[..., V]`` logits outside the top-k / top-p support to -inf.
+
+    ``top_k`` / ``top_p`` may be traced per-lane scalars (or ``[...]``
+    arrays broadcasting against the leading dims).  Ties at the k-th
+    logit are all kept (support may exceed k on exact ties); the top-p
+    set is the smallest prefix of the sorted distribution whose mass
+    reaches ``top_p`` (the argmax is always kept).
+    """
+    v = logits.shape[-1]
+    top_k = jnp.asarray(top_k)
+    top_p = jnp.asarray(top_p)
+    sorted_desc = jnp.sort(logits, axis=-1)[..., ::-1]
+    k = jnp.clip(top_k, 0, v)
+    kth = jnp.take_along_axis(
+        sorted_desc, jnp.maximum(k - 1, 0)[..., None], axis=-1)
+    keep_k = jnp.where((k > 0)[..., None], logits >= kth, True)
+    probs = jax.nn.softmax(sorted_desc, axis=-1)
+    # keep sorted rank j iff the mass strictly before it is < top_p: the
+    # smallest prefix reaching top_p (rank 0 always kept since mass-before 0)
+    keep_sorted = (jnp.cumsum(probs, axis=-1) - probs) < top_p[..., None]
+    n_keep = jnp.maximum(jnp.sum(keep_sorted, axis=-1), 1)
+    thresh = jnp.take_along_axis(sorted_desc, (n_keep - 1)[..., None], axis=-1)
+    keep_p = logits >= thresh
+    return jnp.where(keep_k & keep_p, logits, NEG_INF)
+
+
+def sample_token(logits: jax.Array, key: jax.Array, temperature, top_k,
+                 top_p) -> jax.Array:
+    """Sample one token from ``[V]`` logits; bitwise argmax at temperature 0."""
+    greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)
+    filt = filter_logits(scaled, top_k, top_p)
+    drawn = jax.random.categorical(key, filt).astype(jnp.int32)
+    return jnp.where(temperature > 0, drawn, greedy_tok)
+
+
+def sample_lanes(logits: jax.Array, keys: jax.Array, temperature: jax.Array,
+                 top_k: jax.Array, top_p: jax.Array) -> jax.Array:
+    """Per-lane vectorized sampling: ``[B, V]`` logits, ``[B, 2]`` keys,
+    ``[B]`` per-lane params -> ``[B]`` tokens.  Each lane is the exact
+    vmap of :func:`sample_token`, so a lane's draw is bitwise independent
+    of its batch neighbours."""
+    return jax.vmap(sample_token)(logits, keys, temperature, top_k, top_p)
+
+
+def sampling_probs(logits: jax.Array, temperature, top_k, top_p) -> jax.Array:
+    """The post-filter sampling distribution over ``[V]`` — what
+    :func:`sample_token` draws from (one-hot argmax at temperature 0).
+    This is the ``p`` / ``q`` entering the speculative acceptance rule."""
+    scaled = logits.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)
+    filt = filter_logits(scaled, top_k, top_p)
+    probs = jax.nn.softmax(filt, axis=-1)
+    onehot = jax.nn.one_hot(jnp.argmax(logits, axis=-1), logits.shape[-1],
+                            dtype=jnp.float32)
+    return jnp.where(temperature > 0, probs, onehot)
+
+
+def speculative_accept(target_logits: jax.Array, draft_probs: jax.Array,
+                       draft_tokens: jax.Array, n_drafted, key: jax.Array,
+                       temperature, top_k, top_p):
+    """Rejection-sampling acceptance for one lane's speculative round.
+
+    target_logits: ``[K+1, V]`` verify-pass logits — row ``i`` is the full
+    model's distribution for the token at draft slot ``i`` (row ``K`` the
+    bonus token after a fully-accepted window); draft_probs: ``[K, V]``
+    post-filter draft distributions; draft_tokens: ``[K]`` (rows past
+    ``n_drafted`` are padding and never accepted).
+
+    Returns ``(n_accepted, next_token)``: the lane emits
+    ``draft_tokens[:n_accepted]`` followed by ``next_token`` (the residual
+    resample at the first rejection, or the bonus row when everything
+    drafted was accepted).  Under ``temperature == 0`` acceptance is exact
+    argmax agreement and ``next_token`` the argmax of the corrective row,
+    reproducing non-speculative greedy token-for-token.
+    """
+    k_max = draft_probs.shape[0]
+    dist = jax.vmap(lambda row: sampling_probs(row, temperature, top_k, top_p))
+    p = dist(target_logits)                                   # [K+1, V]
+    idx = jnp.arange(k_max)
+    p_tok = p[idx, draft_tokens]
+    q_tok = draft_probs[idx, draft_tokens]
+    u = jax.random.uniform(key, (k_max,))
+    accept_sampled = u * q_tok < p_tok                        # u < p/q
+    greedy = temperature <= 0
+    tgt_argmax = jnp.argmax(target_logits, axis=-1).astype(jnp.int32)
+    ok = jnp.where(greedy, tgt_argmax[:k_max] == draft_tokens, accept_sampled)
+    ok &= idx < n_drafted
+    n_accepted = jnp.sum(jnp.cumprod(ok.astype(jnp.int32)))
+    # corrective row: first rejected slot, or the bonus row when all accepted
+    row = jnp.minimum(n_accepted, k_max)
+    p_row = p[row]
+    q_row = jnp.where(row < n_drafted,
+                      draft_probs[jnp.minimum(row, k_max - 1)], 0.0)
+    resid = jnp.clip(p_row - q_row, 0.0, None)
+    resid_sum = jnp.sum(resid)
+    fix = jnp.where(resid_sum > 0, resid / jnp.maximum(resid_sum, 1e-20), p_row)
+    drawn = jax.random.categorical(
+        jax.random.fold_in(key, 1),
+        jnp.log(jnp.maximum(fix, 1e-30))).astype(jnp.int32)
+    next_token = jnp.where(greedy, tgt_argmax[row], drawn)
+    return n_accepted, next_token

@@ -47,7 +47,9 @@ class Request:
     trace itself stays host-side data.  ``block_hashes`` is the prompt's
     content hash chain over full cache blocks
     (``models.lm.prompt_block_hashes``) — the engine fills it in when the
-    prefix cache is on, and the allocator matches it at admission."""
+    prefix cache is on, and the allocator matches it at admission.
+    ``sampling`` is the request's :class:`serve.sampling.SamplingParams`
+    (temperature / top-k / top-p / PRNG seed); ``None`` means greedy."""
 
     rid: object
     prompt: object                   # int sequence / [S] array of token ids
@@ -56,6 +58,7 @@ class Request:
     eos_id: Optional[int] = None     # stop early when this token is emitted
     frontend_emb: Optional[object] = None
     block_hashes: Optional[tuple] = None
+    sampling: Optional[object] = None  # SamplingParams; None == greedy
 
     @property
     def prompt_len(self) -> int:

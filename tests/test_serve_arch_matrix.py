@@ -2,10 +2,14 @@
 architecture-general paged serving.
 
 Every arch in ``repro.configs`` (reduced dims) is driven through the
-continuous-batching engine in six regimes — dense, dense+bucketed, paged,
-paged+bucketed prompts, paged+chunked prefill (and the combination) — and
-must emit, per request, exactly the tokens the static ``Engine`` oracle
-produces for that request alone.  The paged regime builds mixed layer
+continuous-batching engine in seven regimes — dense, dense+bucketed, paged,
+paged+bucketed prompts, paged+chunked prefill (and the combination), and
+paged+self-speculative (truncated-layer drafts, batched verify, cache
+rewind) — and must emit, per request, exactly the tokens the static
+``Engine`` oracle produces for that request alone.  The ``paged`` and
+``paged_spec`` rows together are the speculate={0,4} column pair: greedy
+speculative decode must be *token-identical*, not merely
+distribution-identical.  The paged regime builds mixed layer
 groups from the per-layer capability report (``lm.serve_groups``): global
 attention and MLA latents page through growing block tables, sliding-window
 layers through window block rings, ssd/rglru layers carry O(1) recurrent
@@ -48,6 +52,10 @@ MODES = {
     "paged_chunk": {"paged": True, "prefill_chunk": 8},
     "paged_bucket_chunk": {"paged": True, "bucket_prompts": True,
                            "prefill_chunk": 7},
+    # self-speculative decoding: truncated-layer drafts + batched verify +
+    # paged-cache rewind must stay token-identical under greedy ("paged"
+    # above is the speculate=0 column of the matrix)
+    "paged_spec": {"paged": True, "speculate": 4},
 }
 
 FAST_ARCHS = ("tinyllama-1.1b", "gemma2-9b", "mixtral-8x7b",
@@ -118,6 +126,13 @@ def _run_identity(arch, mode):
         if groups["cross"]:
             assert peaks.get("cross", 0) > 0, (arch, mode, peaks)
             _assert_cross_residency_flat(eng)
+
+    if MODES[mode].get("speculate"):
+        # drafts really ran, and every rejected draft row was rewound
+        t = eng.telemetry
+        assert t.total_drafted() > 0, (arch, mode)
+        accepted = sum(s.accepted for s in t.steps)
+        assert t.total_rewound_tokens() == t.total_drafted() - accepted
 
 
 def _assert_cross_residency_flat(eng):

@@ -377,3 +377,219 @@ def test_paged_slot_reuse_after_eos():
     assert results[1] == ref_toks[1]
     assert eng.scheduler.slot_admissions[0] == 2
     eng.allocator.check_no_leaks()
+
+
+# =============================================================================
+# speculative rewind (block-tail truncation + window-ring rollback +
+# recurrent-state snapshot/restore)
+# =============================================================================
+
+def test_truncate_frees_whole_tail_blocks_only():
+    """Rewind frees only blocks wholly past the kept length; a partially
+    vacated tail block stays claimed (its stale rows sit beyond the slot's
+    position and are overwritten before they become attendable)."""
+    cfg = CacheConfig(block_size=4, n_blocks=8)
+    a = BlockAllocator(cfg)
+    a.allocate(0, 3)
+    a.extend(0, 11)                        # 3 blocks
+    assert len(a.tables[0]) == 3
+    freed = a.truncate(0, 6)               # keep blocks_for(6) == 2
+    assert len(freed) == 1 and len(a.tables[0]) == 2
+    a.check()
+    assert a.truncate(0, 5) == []          # same covering blocks: no-op free
+    assert len(a.tables[0]) == 2
+    a.check()
+    # freed tail block is the next handed out (LIFO reuse)
+    assert a.extend(0, 11) == freed
+    a.free_slot(0)
+    a.check_no_leaks()
+
+
+def test_truncate_guards():
+    cfg = CacheConfig(block_size=4, n_blocks=8)
+    a = BlockAllocator(cfg)
+    from repro.serve import AllocatorInvariantError
+    with pytest.raises(AllocatorInvariantError):
+        a.truncate(0, 2)                   # no allocation
+    a.allocate(0, 5)
+    with pytest.raises(AllocatorInvariantError):
+        a.truncate(0, 9)                   # cannot grow
+    a.free_slot(0)
+    a.check_no_leaks()
+
+
+def test_truncate_never_drops_shared_or_indexed_blocks():
+    """Rewinding must never free content visible beyond the slot: a
+    committed (prefix-indexed) or CoW-shared block in the dropped tail is
+    a structural error, not a silent free."""
+    from repro.serve import AllocatorInvariantError
+    cfg = CacheConfig(block_size=4, n_blocks=16)
+    a = BlockAllocator(cfg)
+    a.set_layout(CacheLayout(sharable=True))
+    hashes = ("h0", "h1")
+    a.allocate(0, 8, block_hashes=hashes)
+    a.commit_slot(0)                       # both blocks now indexed
+    with pytest.raises(AllocatorInvariantError):
+        a.truncate(0, 4)                   # would drop indexed block 1
+    a.check()                              # guard left the ledgers intact
+    # a second slot sharing the prefix: its matched blocks are refcounted
+    a.allocate(1, 8, block_hashes=hashes)
+    assert a.tables[1][:2] == a.tables[0][:2]
+    with pytest.raises(AllocatorInvariantError):
+        a.truncate(1, 4)
+    a.check()
+    a.free_slot(0)
+    a.free_slot(1)
+    a.check_no_leaks()
+
+
+def test_truncate_window_rolls_ring_back():
+    """Window-ring rollback pops exactly the ring entries past the rewind
+    position; the low edge (slid by first_query_pos pinned at the
+    pre-draft position) is untouched."""
+    a = _window_alloc(n_blocks=16, bs=4, window=8, cap=5)
+    a.allocate(0, 6)                       # logical blocks 0..1
+    # speculative grow: +6 rows with the query pinned at pos 5
+    a.extend_window(0, 12, first_query_pos=5)
+    hi = sorted(a.window_tables[0])
+    assert hi[-1] == 2                     # rows 6..11 -> logical block 2
+    freed = a.truncate_window(0, 7)        # rewind to 7 resident tokens
+    assert [i for i in sorted(a.window_tables[0])] == [0, 1]
+    assert len(freed) == 1
+    a.check()
+    a.free_slot(0)
+    a.check_no_leaks()
+
+
+def test_rewind_churn_randomized_never_leaks():
+    """Randomized speculative churn: slots admit, grow k+1 rows (the
+    draft/verify reservation), rewind to a random acceptance point,
+    retire — with the full structural ``check()`` after every rewind.
+    Terminal state must return the pool to fully-free."""
+    import random
+
+    rng = random.Random(11)
+    for trial in range(8):
+        cfg = CacheConfig(block_size=4, n_blocks=24)
+        a = BlockAllocator(cfg)
+        a.set_layout(CacheLayout(window=8, window_cap_blocks=4))
+        live: dict[int, int] = {}          # slot -> resident tokens
+        next_slot = 0
+        for _ in range(200):
+            op = rng.random()
+            if op < 0.3 and len(live) < 4:
+                n = rng.randint(1, 9)
+                if a.can_allocate(n):
+                    a.allocate(next_slot, n)
+                    live[next_slot] = n
+                    next_slot += 1
+            elif op < 0.85 and live:
+                slot = rng.choice(sorted(live))
+                pos = live[slot]
+                k = rng.randint(1, 4)
+                grown = pos + k + 1        # draft k + bonus row
+                if not a.can_allocate(grown - pos):
+                    continue
+                a.extend(slot, grown)
+                a.extend_window(slot, grown, first_query_pos=pos - 1)
+                accepted = rng.randint(0, k)
+                keep = pos + accepted + 1
+                a.truncate(slot, keep)
+                a.truncate_window(slot, keep)
+                a.check()                  # full ledger check every rewind
+                live[slot] = keep
+            elif live:
+                slot = rng.choice(sorted(live))
+                a.free_slot(slot)
+                del live[slot]
+        for slot in sorted(live):
+            a.free_slot(slot)
+        a.check_no_leaks()
+
+
+def test_recurrent_state_snapshot_restore_exact():
+    """``snapshot_state_lanes`` / ``restore_state_lanes`` must round-trip
+    a lane's ssd/rglru scan state bitwise while leaving other lanes and
+    non-state entries untouched — the draft pass pollutes, the restore
+    erases."""
+    cfg = get("mamba2-370m").reduced()
+    key = jax.random.PRNGKey(3)
+    # the engine's paged tree: state slabs are [repeats, n_slots, ...]
+    caches = lm.init_cache(cfg, 3, 16, jnp.float32)
+    noise = jax.tree.map(
+        lambda x: jax.random.normal(key, x.shape, jnp.float32), caches)
+    snap = lm.snapshot_state_lanes(cfg, noise, 1)
+    assert jax.tree.leaves(snap)                 # ssd arch has state entries
+    polluted = jax.tree.map(lambda x: x + 1.0, noise)
+    restored = lm.restore_state_lanes(cfg, polluted, snap, 1)
+    for a, b, c in zip(jax.tree.leaves(restored), jax.tree.leaves(noise),
+                       jax.tree.leaves(polluted)):
+        assert jnp.array_equal(a[:, 1], b[:, 1])  # lane 1: bitwise rollback
+        assert jnp.array_equal(a[:, 0], c[:, 0])  # other lanes untouched
+        assert jnp.array_equal(a[:, 2], c[:, 2])
+    # attention-arch tree has no state entries: snapshot is empty and
+    # restore is the identity
+    cfg2 = get("paper-mlp").reduced()
+    caches2 = lm.init_cache(cfg2, 2, 16, jnp.float32)
+    assert not jax.tree.leaves(lm.snapshot_state_lanes(cfg2, caches2, 0))
+    r2 = lm.restore_state_lanes(cfg2, caches2,
+                                lm.snapshot_state_lanes(cfg2, caches2, 0), 0)
+    for a, b in zip(jax.tree.leaves(r2), jax.tree.leaves(caches2)):
+        assert jnp.array_equal(a, b)
+
+
+def test_speculate_rewinds_and_stays_identical_under_prefix_cache():
+    """Engine-level rewind bar: speculative greedy decode over a shared
+    prefix must stay token-identical to the oracle, rewind only private
+    decode-tail rows (never a CoW/committed prompt block — the allocator
+    raises if it ever would), and leave the pool structurally sound."""
+    cfg = get("tinyllama-1.1b").reduced()
+    key = jax.random.PRNGKey(4)
+    params = lm.init_params(cfg, key, jnp.float32)
+    shared = jax.random.randint(key, (16,), 0, cfg.vocab_size)
+    prompts = [jnp.concatenate([shared, jax.random.randint(
+        jax.random.fold_in(key, i), (4,), 0, cfg.vocab_size)])
+        for i in range(4)]
+    ref = Engine(cfg, params, kv_len=64)
+    expects = [ref.generate(p[None], max_new_tokens=5)[0].tolist()
+               for p in prompts]
+    eng = ContinuousEngine(cfg, params, kv_len=64, n_slots=2, paged=True,
+                           speculate=3, prefix_cache=True)
+    for i, p in enumerate(prompts):
+        eng.submit(p, max_new_tokens=5, rid=i, arrival=i)
+    results = eng.run()
+    for i in range(len(prompts)):
+        assert results[i] == expects[i], i
+    assert eng.telemetry.prefix_hit_rate() > 0   # sharing really happened
+    assert eng.telemetry.total_drafted() > 0
+    eng.allocator.check()
+
+
+def test_speculate_requires_paged_and_validates():
+    cfg = get("paper-mlp").reduced()
+    with pytest.raises(ValueError):
+        ContinuousEngine(cfg, params={}, kv_len=32, speculate=4)
+    with pytest.raises(ValueError):
+        ContinuousEngine(cfg, params={}, kv_len=32, paged=True, speculate=-1)
+
+
+def test_speculate_telemetry_counters_consistent():
+    """drafted >= accepted, rewound == drafted - accepted (every rejected
+    draft row is rewound), and accept_rate matches the totals."""
+    cfg, params, prompts, budgets, expects = _setup("paper-mlp")
+    eng = ContinuousEngine(cfg, params, kv_len=64, n_slots=2, paged=True,
+                           speculate=4)
+    for i, p in enumerate(prompts):
+        eng.submit(p, max_new_tokens=budgets[i], rid=i, arrival=i)
+    results = eng.run()
+    for i in range(len(prompts)):
+        assert results[i] == expects[i], i
+    t = eng.telemetry
+    drafted = t.total_drafted()
+    assert drafted > 0
+    accepted = sum(s.accepted for s in t.steps)
+    assert 0 <= accepted <= drafted
+    assert t.total_rewound_tokens() == drafted - accepted
+    assert t.accept_rate() == pytest.approx(
+        accepted / drafted if drafted else 0.0)
+    eng.allocator.check_no_leaks()

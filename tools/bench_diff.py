@@ -10,6 +10,11 @@ CI runs the smoke benchmark (``benchmarks.serve_throughput --smoke
 * the prefix-cache acceptance invariants must hold in the *fresh* run —
   the cache-on row hits the cache and does not lengthen the deterministic
   admission -> first-token step count relative to the cache-off row;
+* the speculative-decoding invariants must hold in the *fresh* run — the
+  speculate-on row accepted at least one drafted token, emits at least as
+  many tokens per engine step as the speculate-off row, and its
+  ``accept_rate`` (deterministic under greedy) has not regressed below
+  the committed baseline's;
 * timings are reported as deltas but never gate: absolute numbers are
   machine-dependent, so only deterministic quantities fail the diff.
 
@@ -59,11 +64,35 @@ def diff(baseline: dict, fresh: dict) -> list[str]:
         other = fresh_rows.get(name.replace("_on_", "_off_"))
         if row.get("prefix_hit_rate", 0) <= 0:
             errors.append(f"{name}: prefix cache produced no hits")
-        if other and row.get("first_token_steps", 0) > other.get("first_token_steps", 0):
+        off_steps = other.get("first_token_steps", 0) if other else 0
+        if other and row.get("first_token_steps", 0) > off_steps:
             errors.append(
                 f"{name}: cache-on first-token step count "
                 f"{row['first_token_steps']} exceeds cache-off "
                 f"{other['first_token_steps']}"
+            )
+
+    # deterministic speculative-decoding invariants on the fresh run
+    for name, row in sorted(fresh_rows.items()):
+        if "serve_speculate_on" not in name:
+            continue
+        other = fresh_rows.get(name.replace("_on_", "_off_"))
+        if row.get("accept_rate", 0) <= 0:
+            errors.append(f"{name}: speculation accepted no drafted token")
+        if other and row.get("tok_per_step", 0) < other.get("tok_per_step", 0):
+            errors.append(
+                f"{name}: tokens per engine step {row['tok_per_step']:.3f} "
+                f"below non-speculative {other['tok_per_step']:.3f}"
+            )
+        base = base_rows.get(name)
+        base_accept = base.get("accept_rate") if base else None
+        if base_accept and row.get("accept_rate", 0) < 0.5 * base_accept:
+            # a couple of flipped near-tie argmaxes on a different BLAS
+            # may move single drafts; a halved rate is a real regression
+            errors.append(
+                f"{name}: accept_rate {row['accept_rate']:.3f} regressed "
+                f"below half the committed baseline "
+                f"{base['accept_rate']:.3f}"
             )
     return errors
 
