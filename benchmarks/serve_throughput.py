@@ -24,6 +24,11 @@ the admission→first-token step count the cache shortens.
 self-speculative decoding off and on — identical tokens asserted — and
 reports the draft accept rate plus tokens per engine step (the
 deterministic sequential-step collapse speculation buys).
+``run_router`` replays a shared-prefix family trace through a single
+replica, a co-located router fleet and a disaggregated prefill/decode
+fleet — all three token-identical per request — and reports the
+deterministic ``decode_starvation`` count (decode lanes sharing an engine
+step with prefill work) the prefill/decode split strictly reduces.
 
 The smoke rows are committed in-repo as ``BENCH_serve.json``;
 ``tools/bench_diff.py`` diffs a fresh smoke run against it in CI.
@@ -47,7 +52,7 @@ import jax.numpy as jnp
 from repro.configs import get
 from repro.core import Topology, compile_plan
 from repro.models import lm
-from repro.serve import ContinuousEngine, Engine
+from repro.serve import ContinuousEngine, Engine, Router
 
 
 def _serve_plan(cfg, kv_len: int, n_slots: int, devices: int = 4):
@@ -354,6 +359,122 @@ def run_speculative(arch: str = "tinyllama-1.1b", n_requests: int = 6,
     return [off, on]
 
 
+def _run_router_trace(cfg, params, prompts, budgets, kv_len, n_slots,
+                      stagger, name, *, n_replicas, disaggregate,
+                      chunk) -> dict:
+    """Drive one trace through a router fleet; returns a result row with
+    the fleet-level counters (``decode_starvation`` is the gated one)."""
+    router = Router.build(cfg, params, n_replicas=n_replicas,
+                          disaggregate=disaggregate, kv_len=kv_len,
+                          n_slots=n_slots, paged=True, prefill_chunk=chunk,
+                          prefix_cache=True,
+                          plans=_serve_plan(cfg, kv_len, n_slots))
+    router.submit(prompts[0], max_new_tokens=2, rid="warmup")  # compile
+    router.run()
+    router.reset_stats()
+    for rep in router.replicas:
+        rep.engine.allocator.drop_cached()  # no pre-seeded prefix index
+    base = router.now
+    for i, p in enumerate(prompts):
+        router.submit(p, max_new_tokens=budgets[i], rid=i,
+                      arrival=base + i * stagger)
+    t0 = time.perf_counter()
+    results = router.run()
+    wall = time.perf_counter() - t0
+    fleet = router.telemetry
+    total = fleet.total_tokens()
+    decode_steps = [s.seconds for _, tel in fleet.replicas
+                    for s in tel.steps
+                    if not s.prefills and not s.prefill_chunks]
+    step_ms = (sum(decode_steps) / max(1, len(decode_steps))) * 1e3
+    engine_steps = sum(len(tel.steps) for _, tel in fleet.replicas)
+    for rep in router.replicas:
+        rep.engine.allocator.check_no_leaks()
+    return {"name": name, "results": results,
+            "us_per_call": wall * 1e6 / max(1, total),
+            "tok_per_sec": total / max(wall, 1e-9),
+            "decode_step_ms": step_ms,
+            "prefill_compiles": sum(r.engine.prefill_compiles()
+                                    for r in router.replicas),
+            "peak_resident_kib": sum(tel.peak_resident_bytes()
+                                     for _, tel in fleet.replicas) / 1024,
+            "occupancy": fleet.occupancy(),
+            "cache_pressure": fleet.cache_pressure(),
+            "prefix_hit_rate": fleet.prefix_hit_rate(),
+            "preemptions": fleet.total_preemptions(),
+            "engine_steps": engine_steps,
+            "tok_per_step": total / max(1, engine_steps),
+            # the routed-serving quantities (deterministic under greedy):
+            # decode lanes that shared an engine step with prefill work,
+            # and the block-handoff volume that removed the rest
+            "decode_starvation": fleet.decode_starvation(),
+            "handoffs": router.stats["handoffs"],
+            "transferred_blocks": router.stats["transferred_blocks"]}
+
+
+def run_router(arch: str = "tinyllama-1.1b", n_requests: int = 8,
+               n_slots: int = 2, n_replicas: int = 3, stagger: int = 1,
+               kv_len: int = 128, shared_len: int = 64, tail_len: int = 4,
+               n_families: int = 2, chunk: int = 16,
+               budget: int = 8) -> list[dict]:
+    """Co-located vs disaggregated multi-replica serving on one trace.
+
+    Requests cycle through ``n_families`` long shared system-prompt-style
+    prefixes with short private tails, staggered faster than a prefill
+    completes.  The co-located fleet runs ``n_replicas`` mixed replicas:
+    each family's blocks are not committed anywhere yet when its
+    followers arrive, so the load-spreading term scatters them across
+    replicas and every one runs a full *cold* chunked prefill on a
+    replica that is also decoding — each chunk starves the resident
+    decode lanes for one step.  The disaggregated fleet (same replica
+    count: one prefill + ``n_replicas - 1`` decode) funnels every prefill
+    through the one replica whose content index therefore accumulates all
+    families — followers hit it — and hands finished blocks to the decode
+    side, which recomputes only each request's sub-block tail, so
+    strictly fewer decode lanes ever share a step with prefill work
+    (``decode_starvation``, deterministic, gated here and by
+    ``tools/bench_diff.py``).  Per-request tokens must be bitwise
+    identical to single-replica serving in both fleets — routing and
+    handoff are placement decisions, never compute changes.
+    """
+    cfg = get(arch).reduced()
+    key = jax.random.PRNGKey(4)
+    params = lm.init_params(cfg, key, jnp.float32)
+    fams = [jax.random.randint(jax.random.fold_in(key, 700 + f),
+                               (shared_len,), 0, cfg.vocab_size)
+            for f in range(n_families)]
+    prompts = [jnp.concatenate([fams[i % n_families], jax.random.randint(
+        jax.random.fold_in(key, i), (tail_len,), 0, cfg.vocab_size)])
+        for i in range(n_requests)]
+    budgets = [budget] * n_requests
+
+    single = _run_continuous(cfg, params, prompts, budgets, kv_len, n_slots,
+                             stagger, f"serve_router_single_{arch}",
+                             paged=True, prefill_chunk=chunk,
+                             prefix_cache=True)
+    coloc = _run_router_trace(cfg, params, prompts, budgets, kv_len,
+                              n_slots, stagger,
+                              f"serve_router_coloc_{arch}",
+                              n_replicas=n_replicas, disaggregate=False,
+                              chunk=chunk)
+    disagg = _run_router_trace(cfg, params, prompts, budgets, kv_len,
+                               n_slots, stagger,
+                               f"serve_router_disagg_{arch}",
+                               n_replicas=n_replicas, disaggregate=True,
+                               chunk=chunk)
+    expect = single.pop("results")
+    assert coloc.pop("results") == expect, \
+        "co-located routed serving diverged from single-replica tokens"
+    assert disagg.pop("results") == expect, \
+        "disaggregated routed serving diverged from single-replica tokens"
+    assert disagg["handoffs"] > 0 and disagg["transferred_blocks"] > 0, \
+        "disaggregated fleet never handed blocks to a decode replica"
+    assert disagg["decode_starvation"] < coloc["decode_starvation"], \
+        (f"prefill/decode split did not reduce decode starvation "
+         f"({disagg['decode_starvation']} vs {coloc['decode_starvation']})")
+    return [single, coloc, disagg]
+
+
 def _print_rows(rows: list[dict]) -> None:
     for r in rows:
         derived = ";".join(
@@ -417,6 +538,10 @@ def main(argv=None) -> None:
         # self-speculative decoding off vs on (greedy token identity,
         # accept_rate > 0 and the tok_per_step bar asserted inside)
         emit(run_speculative("tinyllama-1.1b", n_requests=4, budget=12))
+        # multi-replica routing, co-located vs disaggregated (identity
+        # with single-replica serving and the strict decode-starvation
+        # reduction asserted inside)
+        emit(run_router("tinyllama-1.1b", n_requests=6, budget=6))
         if args.json:
             _write_json(args.json, all_rows)
         return
@@ -429,6 +554,7 @@ def main(argv=None) -> None:
     emit(run_bucketed())
     emit(run_prefix())
     emit(run_speculative())
+    emit(run_router())
     if args.json:
         _write_json(args.json, all_rows)
 

@@ -5,12 +5,18 @@ Usage:
         --reduced --batch 4 --prompt-len 16 --max-new 32
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
         --reduced --continuous --requests 8 --stagger 2 --adapt --devices 4
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+        --reduced --continuous --paged --replicas 3 --disaggregate \
+        --chunk-prefill 16 --shared-prefix 32 --requests 6
 
 ``--continuous`` drives the slot-scheduled engine over a staggered arrival
-trace; ``--adapt`` then closes the paper's compiler/assistant loop: the
-serving telemetry (slot occupancy, cache pressure) feeds the §3 scheduling
-assistants, which rebalance the compiler's plan under the measured serving
-interference.
+trace; ``--replicas N`` serves the same trace through a cache-aware router
+over N engine replicas (``--disaggregate`` splits prefill from decode
+replicas with block-granular KV handoff); ``--adapt`` then closes the
+paper's compiler/assistant loop: the serving telemetry (slot occupancy,
+cache pressure — fleet-aggregated under ``--replicas``) feeds the §3
+scheduling assistants, which rebalance the compiler's plan under the
+measured serving interference.
 """
 
 from __future__ import annotations
@@ -24,7 +30,98 @@ import jax.numpy as jnp
 from repro import configs
 from repro.core import Topology, adapt_plan, compile_plan
 from repro.models import lm
-from repro.serve import ContinuousEngine, Engine, SamplingParams
+from repro.serve import ContinuousEngine, Engine, Router, SamplingParams
+
+
+def _trace(args, cfg, key):
+    """The launcher's arrival trace: (prompt, frontend_emb, sampling) per
+    request — shared between the single-engine and routed paths so
+    ``--replicas`` changes placement, never the workload."""
+    sp = None
+    if args.temperature > 0:
+        sp = [SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                             top_p=args.top_p, seed=args.sample_seed + i)
+              for i in range(args.requests)]
+    needs_fe = bool(cfg.frontend or cfg.n_enc_layers)
+    shared = jax.random.randint(key, (max(0, args.shared_prefix),), 0,
+                                cfg.vocab_size)
+    out = []
+    for i in range(args.requests):
+        prompt = jax.random.randint(jax.random.fold_in(key, i),
+                                    (args.prompt_len,), 0, cfg.vocab_size)
+        if args.shared_prefix > 0:
+            # every request opens with the same system-prompt-style prefix
+            # — the workload the prefix cache deduplicates
+            prompt = jnp.concatenate([shared, prompt])
+        fe = (jax.random.normal(jax.random.fold_in(key, 10_000 + i),
+                                (cfg.frontend_tokens, cfg.frontend_dim),
+                                jnp.float32) if needs_fe else None)
+        out.append((prompt, fe, None if sp is None else sp[i]))
+    return out
+
+
+def _router(args, cfg, params, key):
+    """``--replicas N``: route the trace across an N-engine fleet, with
+    ``--disaggregate`` splitting prefill from decode replicas."""
+    plan = None
+    if args.adapt:
+        serve_shape = ContinuousEngine.decode_shape_for(args.kv_len,
+                                                        args.batch)
+        plan = compile_plan(cfg, serve_shape,
+                            Topology.homogeneous(args.devices))
+    router = Router.build(cfg, params, n_replicas=args.replicas,
+                          disaggregate=args.disaggregate,
+                          kv_len=args.kv_len, n_slots=args.batch,
+                          paged=args.paged,
+                          prefill_chunk=args.chunk_prefill,
+                          prefix_cache=args.prefix_cache or None,
+                          plans=plan,
+                          dtype=jnp.float32 if args.reduced
+                          else jnp.bfloat16,
+                          bucket_prompts=args.bucket,
+                          pricing=args.pricing,
+                          cache_blocks=args.cache_blocks)
+    if router.disagg_unsupported_reason:
+        print(f"[router] {args.arch}: disaggregation unavailable "
+              f"({router.disagg_unsupported_reason}) — running "
+              f"{args.replicas} co-located replicas")
+    for i, (prompt, fe, sp) in enumerate(_trace(args, cfg, key)):
+        router.submit(prompt, max_new_tokens=args.max_new, rid=i,
+                      arrival=i * args.stagger, frontend_emb=fe,
+                      sampling=sp)
+    t0 = time.time()
+    results = router.run()
+    dt = time.time() - t0
+    fs = router.fleet_stats()
+    total = fs["total_tokens"]
+    roles = "/".join(r.role for r in router.replicas)
+    print(f"[router] {args.arch}: {len(results)} requests over "
+          f"{args.replicas} replicas ({roles}), {total} tokens in "
+          f"{dt:.2f}s ({total / dt:.1f} tok/s)")
+    print(f"[router] placement={fs['routed_per_replica']} "
+          f"handoffs={fs['handoffs']} "
+          f"transferred_blocks={fs['transferred_blocks']} "
+          f"decode_starvation={fs['decode_starvation']} "
+          f"occupancy={fs['occupancy']:.2f} "
+          f"cache_pressure={fs['cache_pressure']:.2f}"
+          + (f" prefix_hit_rate={fs['prefix_hit_rate']:.2f}"
+             if args.prefix_cache or args.disaggregate else ""))
+    for name, row in router.telemetry.summary().items():
+        print(f"[router]   {name}: tokens={row['tokens']} "
+              f"steps={row['steps']} "
+              f"starved={row['decode_starvation']} "
+              f"occupancy={row['occupancy']:.2f}")
+    if results:
+        print("first request:", results[0])
+    if args.adapt:
+        out = router.adapt()
+        print(f"[adapt] fleet: {len(out.migrations)} queued-request "
+              f"migrations, plan deltas="
+              f"{len(out.trace.deltas) if out.trace else 0}")
+        if out.trace and out.trace.deltas:
+            print(f"[adapt] step time {out.trace.step_times[0]*1e3:.2f}ms "
+                  f"-> {out.trace.step_times[-1]*1e3:.2f}ms "
+                  f"({out.trace.improvement:.1%} under fleet load)")
 
 
 def _static(args, cfg, params, key):
@@ -65,31 +162,12 @@ def _continuous(args, cfg, params, key):
                            draft_layers=args.draft_layers,
                            dtype=jnp.float32 if args.reduced else jnp.bfloat16,
                            plan=plan)
-    # per-request sampling: temperature 0 (default) stays bitwise greedy;
-    # the PRNG seed is --sample-seed + request id, so each request draws
-    # an independent, reproducible stream
-    sp = None
-    if args.temperature > 0:
-        sp = [SamplingParams(temperature=args.temperature, top_k=args.top_k,
-                             top_p=args.top_p, seed=args.sample_seed + i)
-              for i in range(args.requests)]
-    # staggered arrivals: request i becomes admissible at step i * stagger
-    needs_fe = bool(cfg.frontend or cfg.n_enc_layers)
-    shared = jax.random.randint(key, (max(0, args.shared_prefix),), 0,
-                                cfg.vocab_size)
-    for i in range(args.requests):
-        prompt = jax.random.randint(jax.random.fold_in(key, i),
-                                    (args.prompt_len,), 0, cfg.vocab_size)
-        if args.shared_prefix > 0:
-            # every request opens with the same system-prompt-style prefix
-            # — the workload the prefix cache deduplicates
-            prompt = jnp.concatenate([shared, prompt])
-        fe = (jax.random.normal(jax.random.fold_in(key, 10_000 + i),
-                                (cfg.frontend_tokens, cfg.frontend_dim),
-                                jnp.float32) if needs_fe else None)
+    # staggered arrivals: request i becomes admissible at step i * stagger;
+    # per-request sampling (temperature 0 stays bitwise greedy) rides the
+    # shared trace builder
+    for i, (prompt, fe, sp) in enumerate(_trace(args, cfg, key)):
         eng.submit(prompt, max_new_tokens=args.max_new, rid=i,
-                   arrival=i * args.stagger, frontend_emb=fe,
-                   sampling=None if sp is None else sp[i])
+                   arrival=i * args.stagger, frontend_emb=fe, sampling=sp)
     t0 = time.time()
     results = eng.run()
     dt = time.time() - t0
@@ -220,6 +298,14 @@ def main(argv=None):
     ap.add_argument("--draft-layers", type=int, default=None, metavar="L",
                     help="--speculate: layers the draft pass runs "
                          "(default: half the stack, whole cycles)")
+    ap.add_argument("--replicas", type=int, default=1, metavar="N",
+                    help="continuous: serve through a cache-aware router "
+                         "over N engine replicas (N > 1)")
+    ap.add_argument("--disaggregate", action="store_true",
+                    help="--replicas: replica 0 runs chunked prefill only "
+                         "and hands finished KV blocks to decode replicas "
+                         "(degrades to co-located on archs without "
+                         "content-transferable blocks)")
     ap.add_argument("--adapt", action="store_true",
                     help="feed serve telemetry to the §3 assistants")
     ap.add_argument("--devices", type=int, default=4,
@@ -232,7 +318,12 @@ def main(argv=None):
     key = jax.random.PRNGKey(args.seed)
     params = lm.init_params(cfg, key, jnp.float32 if args.reduced
                             else jnp.bfloat16)
-    if args.continuous:
+    if args.replicas > 1:
+        if not args.continuous:
+            raise SystemExit("--replicas requires --continuous (the router "
+                             "fans a request trace over engine replicas)")
+        _router(args, cfg, params, key)
+    elif args.continuous:
         _continuous(args, cfg, params, key)
     else:
         _static(args, cfg, params, key)

@@ -122,6 +122,7 @@ class ServeTelemetry:
         self._total_drafted = 0
         self._total_accepted = 0
         self._total_rewound = 0
+        self._starved_decode_steps = 0
 
     def reset(self) -> None:
         """Drop all recorded steps and whole-run aggregates."""
@@ -139,6 +140,7 @@ class ServeTelemetry:
         self._total_drafted = 0
         self._total_accepted = 0
         self._total_rewound = 0
+        self._starved_decode_steps = 0
 
     def record_step(self, step: int, seconds: float, active_slots,
                     n_slots: int, blocks_in_use: int, n_blocks: int,
@@ -185,6 +187,13 @@ class ServeTelemetry:
         self._total_drafted += drafted
         self._total_accepted += accepted
         self._total_rewound += rewound_tokens
+        # decode-step starvation: every decode lane that shared this engine
+        # step with prefill work had its token delayed by that prefill's
+        # compute — the displacement disaggregated prefill/decode removes.
+        # A running total (not derived from `steps`) so history eviction
+        # cannot lose it.
+        if (prefills or prefill_chunks) and active_slots:
+            self._starved_decode_steps += len(tuple(active_slots))
 
     # -- aggregates -----------------------------------------------------------
     def _recent(self) -> list:
@@ -192,12 +201,12 @@ class ServeTelemetry:
         return recent[-self.window:]
 
     def occupancy(self) -> float:
-        """Mean fraction of slots decoding over the recent window."""
-        recent = self._recent()
-        if not recent:
-            return 0.0
-        return statistics.mean(
-            len(s.active_slots) / s.n_slots for s in recent if s.n_slots)
+        """Mean fraction of slots decoding over the recent window (0 when
+        no recent step had any slots — e.g. a replica that has only run
+        admission-less bookkeeping steps — not ``StatisticsError``)."""
+        vals = [len(s.active_slots) / s.n_slots for s in self._recent()
+                if s.n_slots]
+        return statistics.mean(vals) if vals else 0.0
 
     def cache_pressure(self) -> float:
         """Mean fraction of KV-cache blocks allocated over the recent
@@ -269,6 +278,14 @@ class ServeTelemetry:
         rollback + recurrent-state restore)."""
         return self._total_rewound
 
+    def decode_starvation(self) -> int:
+        """Whole-run count of decode-lane-steps displaced by prefill work:
+        each active decode lane in an engine step that also ran a prefill
+        (whole or chunk) counts one unit.  Deterministic under greedy —
+        the quantity the router benchmark gates when comparing co-located
+        against disaggregated prefill/decode."""
+        return self._starved_decode_steps
+
     def tokens_per_sec(self) -> float:
         if self._busy_seconds <= 0:
             return 0.0
@@ -302,6 +319,95 @@ class ServeTelemetry:
         """A ``telemetry=`` callback for ``core.assistants.run_adaptation``:
         utilization under the measured serving interference, re-evaluated
         against each candidate assignment as the assistants migrate nodes."""
+        from repro.core.assistants import simulate_utilization
+
+        interference = self.device_interference(cost_model.k)
+
+        def callback(assignment):
+            return simulate_utilization(graph, assignment, cost_model,
+                                        interference=interference)
+        return callback
+
+
+class FleetTelemetry:
+    """Aggregated view over the per-replica ``ServeTelemetry`` feeds of a
+    multi-replica ``serve.Router``.
+
+    Each replica records its own steps; the fleet object never copies
+    them — it holds ``(name, ServeTelemetry)`` references and reduces on
+    demand.  Counters (tokens, starvation, preemptions) sum across
+    replicas; ratios (occupancy, cache pressure, prefix hit rate)
+    average over the replicas that have recorded anything, so an idle
+    prefill replica does not dilute the fleet picture.  The §3 bridge is
+    ``device_interference``: the element-wise mean of every replica's
+    per-device multipliers, which the router feeds into one
+    ``core.assistants.run_adaptation`` loop for the whole fleet.
+    """
+
+    def __init__(self):
+        self.replicas: list[tuple[str, ServeTelemetry]] = []
+
+    def attach(self, name: str, telemetry: ServeTelemetry) -> None:
+        self.replicas.append((name, telemetry))
+
+    def _live(self) -> list:
+        return [t for _, t in self.replicas if t.steps]
+
+    def total_tokens(self) -> int:
+        return sum(t.total_tokens() for _, t in self.replicas)
+
+    def total_preemptions(self) -> int:
+        return sum(t.total_preemptions() for _, t in self.replicas)
+
+    def decode_starvation(self) -> int:
+        """Fleet-wide decode-lane-steps displaced by co-scheduled prefill
+        work (prefill-only replicas contribute 0 by construction — their
+        steps never carry decode lanes)."""
+        return sum(t.decode_starvation() for _, t in self.replicas)
+
+    def occupancy(self) -> float:
+        live = self._live()
+        return statistics.mean(t.occupancy() for t in live) if live else 0.0
+
+    def cache_pressure(self) -> float:
+        live = self._live()
+        return statistics.mean(t.cache_pressure() for t in live) \
+            if live else 0.0
+
+    def prefix_hit_rate(self) -> float:
+        looked = sum(t._prefix_lookup_tokens for _, t in self.replicas)
+        hit = sum(t._prefix_hit_tokens for _, t in self.replicas)
+        return hit / looked if looked else 0.0
+
+    def max_concurrency(self) -> int:
+        return sum(t.max_concurrency() for _, t in self.replicas)
+
+    def summary(self) -> dict:
+        """Per-replica snapshot keyed by replica name."""
+        return {name: {"tokens": t.total_tokens(),
+                       "occupancy": t.occupancy(),
+                       "cache_pressure": t.cache_pressure(),
+                       "decode_starvation": t.decode_starvation(),
+                       "steps": len(t.steps)}
+                for name, t in self.replicas}
+
+    # -- assistant bridge (paper §3, fleet level) ------------------------------
+    def device_interference(self, k: int) -> list:
+        """Element-wise mean of every replica's per-device interference:
+        the fleet's measured serving load on a shared k-device mesh."""
+        live = self._live()
+        if not live:
+            return [{"compute": 1.0, "memory": 1.0, "network": 1.0}
+                    for _ in range(k)]
+        per = [t.device_interference(k) for t in live]
+        out = []
+        for d in range(k):
+            out.append({res: statistics.mean(p[d][res] for p in per)
+                        for res in ("compute", "memory", "network")})
+        return out
+
+    def assistant_callback(self, graph, cost_model) -> Callable:
+        """``telemetry=`` feed for one fleet-level ``run_adaptation``."""
         from repro.core.assistants import simulate_utilization
 
         interference = self.device_interference(cost_model.k)

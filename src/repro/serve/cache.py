@@ -685,6 +685,67 @@ class BlockAllocator:
         return len(blocks)
 
     # -- prefix cache -----------------------------------------------------------
+    def match_tokens(self, block_hashes) -> int:
+        """Read-only peek: tokens the longest *indexed* prefix of
+        ``block_hashes`` covers right now — no allocation, no refcount
+        change, no LRU touch.  This is the router's affinity signal (how
+        much of a prompt this replica's pool already holds); 0 on
+        non-sharable layouts."""
+        if not (self.layout.sharable and self.layout.has_global):
+            return 0
+        n = 0
+        for h in block_hashes or ():
+            if h not in self._index:
+                break
+            n += 1
+        return n * self.config.block_size
+
+    def lookup_block(self, block_hash: str) -> Optional[int]:
+        """Physical block currently committed under ``block_hash`` (None
+        when the content is not resident) — the export side of a
+        prefill -> decode block handoff reads pool pages through this."""
+        return self._index.get(block_hash)
+
+    def inject_cached(self, block_hashes) -> list[tuple]:
+        """Install externally produced committed content into the prefix
+        index: for each hash in chain order, claim one block and park it
+        directly in the refcount-0 *cached* pool with its hash registered.
+        Returns the ``(hash, block)`` pairs newly claimed — the caller
+        must copy the physical content into those blocks' pages before
+        any admission can match them.
+
+        Hashes already indexed are skipped (their content is resident);
+        injection stops at the first hash the pool cannot take
+        (``CacheExhausted`` swallowed — a shorter injected chain is
+        graceful degradation: the decode replica recomputes the rest).
+        Chain-prefix structure is preserved either way, so ``allocate``'s
+        longest-prefix matching stays sound.  Requires a sharable layout."""
+        if not (self.layout.sharable and self.layout.has_global):
+            raise AllocatorInvariantError(
+                "inject_cached requires a sharable global layout")
+        injected: list[tuple] = []
+        own = set()
+        for h in block_hashes or ():
+            if h in self._index:
+                continue
+            if not self._free and self._cached and \
+                    next(iter(self._cached)) in own:
+                # claiming would LRU-evict the head of the chain injected
+                # by this very call — a self-cannibalizing injection can
+                # never extend the matchable prefix, so stop here
+                break
+            try:
+                block = self._claim(1, f"injected prefix block {h[:12]}")[0]
+            except CacheExhausted:
+                break
+            self._index[h] = block
+            self._hash_of[block] = h
+            self._tick += 1
+            self._cached[block] = self._tick
+            injected.append((h, block))
+            own.add(block)
+        return injected
+
     def commit_slot(self, slot: int) -> int:
         """Publish ``slot``'s full prompt blocks into the prefix index
         (call once the prompt's K/V is physically resident, i.e. when its
@@ -933,3 +994,74 @@ class BlockAllocator:
             total += self.layout.state_slots * \
                 self.layout.state_bytes_per_slot
         return total
+
+
+class BlockTransferBuffer:
+    """Staging buffer for prefill -> decode block handoff between engine
+    replicas (the disaggregated-serving transfer protocol).
+
+    A prefill replica finishes a prompt, commits its full blocks into its
+    own prefix index, and *exports* their physical content here keyed by
+    content hash (``ContinuousEngine.export_prefix_blocks``); the router
+    then *delivers* the chain to a decode replica, whose allocator claims
+    fresh blocks for the payloads and parks them refcount-0 committed in
+    its own index (``inject_cached`` + ``import_prefix_blocks``) — after
+    which the decode replica admits the request as an ordinary full
+    prefix-cache hit.  The buffer itself is pure host-side staging: it
+    owns no pool blocks on either side, so allocator refcounts never pass
+    through it (``check()`` holds on both allocators at every stage of a
+    handoff, which the transfer tests assert).
+
+    Failure semantics are graceful degradation, never corruption: a
+    payload evicted here (capacity FIFO), or a chain the importing pool
+    cannot fully take, just means the decode replica recomputes those
+    positions — ``take_chain`` only ever returns a *prefix* of the
+    requested chain, preserving the chain-match structure.
+
+    ``capacity_blocks`` bounds staged entries (0 = unbounded); when full,
+    the oldest staged entries are dropped FIFO.
+    """
+
+    def __init__(self, capacity_blocks: int = 0):
+        if capacity_blocks < 0:
+            raise ValueError("capacity_blocks must be >= 0")
+        self.capacity_blocks = capacity_blocks
+        self._entries: OrderedDict[str, object] = OrderedDict()
+        self.stats: dict[str, int] = {"staged": 0, "delivered": 0,
+                                      "dropped": 0}
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def put(self, block_hash: str, payload) -> None:
+        """Stage one block's physical content under its hash; re-staging
+        a held hash refreshes its recency instead of duplicating."""
+        if block_hash in self._entries:
+            self._entries.move_to_end(block_hash)
+            self._entries[block_hash] = payload
+            return
+        while self.capacity_blocks and \
+                len(self._entries) >= self.capacity_blocks:
+            self._entries.popitem(last=False)
+            self.stats["dropped"] += 1
+        self._entries[block_hash] = payload
+        self.stats["staged"] += 1
+
+    def put_chain(self, entries) -> None:
+        """Stage an exported ``(hash, payload)`` chain, head first."""
+        for h, payload in entries:
+            self.put(h, payload)
+
+    def take_chain(self, block_hashes) -> list[tuple]:
+        """Remove and return the longest staged *prefix* of
+        ``block_hashes`` as ``(hash, payload)`` pairs.  Stops at the
+        first hash not held so the receiver always imports a well-formed
+        chain prefix (later stragglers would be unmatchable anyway)."""
+        out: list[tuple] = []
+        for h in block_hashes or ():
+            payload = self._entries.pop(h, None)
+            if payload is None:
+                break
+            out.append((h, payload))
+        self.stats["delivered"] += len(out)
+        return out

@@ -737,6 +737,62 @@ class ContinuousEngine:
                 self.allocator.stores):
             store.rebind(leaf[keys[0]], leaf[keys[1]])
 
+    # -- disaggregated prefill/decode block handoff ------------------------------
+    def export_prefix_blocks(self, block_hashes) -> list[tuple]:
+        """Read the physical content of the committed blocks backing the
+        longest resident prefix of ``block_hashes`` — the *export* side of
+        a prefill -> decode handoff (``serve.cache.BlockTransferBuffer``).
+
+        Each entry is ``(hash, payload)`` where the payload is one
+        ``(k_page, v_page)`` pair per global-group pool leaf, in the
+        engine's deterministic leaf order (identical across replicas of
+        the same config, so payloads import positionally).  Reading
+        copies nothing out of the allocator's books: the blocks stay
+        owned (cached or live) by this replica's pool."""
+        if not self.prefix_cache:
+            raise ValueError("export_prefix_blocks requires prefix_cache "
+                             "(the handoff is keyed by the content index)")
+        self._rebind_stores()
+        gstores = [s for s, g in zip(self.allocator.stores,
+                                     self.allocator.store_groups)
+                   if g == "global"]
+        out: list[tuple] = []
+        for h in block_hashes or ():
+            block = self.allocator.lookup_block(h)
+            if block is None:
+                break
+            out.append((h, tuple((s.k_pages[:, block], s.v_pages[:, block])
+                                 for s in gstores)))
+        return out
+
+    def import_prefix_blocks(self, entries) -> int:
+        """Install exported ``(hash, payload)`` chain entries into this
+        replica's pool as refcount-0 *cached* committed blocks — the
+        *import* side of the handoff.  After this, admitting a request
+        whose hash chain is covered is an ordinary full prefix-cache hit:
+        chunked prefill recomputes only the unhashed tail (plus the
+        mandatory last prompt position, CoW-forked as usual), and decode
+        proceeds token-identically.  Returns the number of blocks whose
+        content was physically installed; hashes already resident are
+        skipped, and a pool too full to take the whole chain takes a
+        prefix (graceful degradation — the rest is recomputed)."""
+        if not self.prefix_cache:
+            raise ValueError("import_prefix_blocks requires prefix_cache")
+        pairs = self.allocator.inject_cached([h for h, _ in entries])
+        if not pairs:
+            return 0
+        by_hash = dict(entries)
+        leaves = [(keys, leaf) for group, keys, leaf in
+                  lm.paged_cache_leaves(self.cfg, self._caches)
+                  if group == "global"]
+        for h, block in pairs:
+            payload = by_hash[h]
+            for (keys, leaf), (k_page, v_page) in zip(leaves, payload):
+                leaf[keys[0]] = leaf[keys[0]].at[:, block].set(k_page)
+                leaf[keys[1]] = leaf[keys[1]].at[:, block].set(v_page)
+        self._rebind_stores()
+        return len(pairs)
+
     @property
     def now(self) -> int:
         """Current engine step — submit() arrivals are absolute against it."""

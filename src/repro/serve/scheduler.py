@@ -30,6 +30,7 @@ arrivals onto steps.
 
 from __future__ import annotations
 
+import heapq
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Optional
@@ -90,7 +91,10 @@ class ActiveSlot:
         if self.n_generated >= self.request.max_new_tokens:
             return True
         eos = self.request.eos_id
-        return eos is not None and self.tokens and self.tokens[-1] == eos
+        # bool(): with no tokens yet the chain short-circuits on the empty
+        # list, and `[]` leaking out of a bool-typed predicate breaks `is
+        # False` identity checks downstream
+        return bool(eos is not None and self.tokens and self.tokens[-1] == eos)
 
 
 class SlotScheduler:
@@ -110,7 +114,11 @@ class SlotScheduler:
         self.allocator = allocator
         self.kv_len = kv_len
         self.pricing = pricing
-        self._free_slots: list[int] = list(range(n_slots - 1, -1, -1))
+        # min-heap: the lowest free slot is always reused first, so the
+        # slot -> device mapping the telemetry derives (slot % k) is a
+        # deterministic function of the admission sequence even under
+        # finish/preempt churn (a plain append would drift to LIFO reuse)
+        self._free_slots: list[int] = list(range(n_slots))
         self._pending: deque[Request] = deque()
         self.active: dict[int, ActiveSlot] = {}
         self.finished: list[ActiveSlot] = []
@@ -160,7 +168,7 @@ class SlotScheduler:
             if not self.allocator.can_allocate(req.prompt_len + 1, reserve):
                 break
             self._pending.popleft()
-            slot = self._free_slots.pop()
+            slot = heapq.heappop(self._free_slots)
             self.allocator.allocate(slot, req.prompt_len + 1,
                                     reserve_tokens=reserve,
                                     block_hashes=req.block_hashes)
@@ -176,7 +184,7 @@ class SlotScheduler:
         the lane for the next admission."""
         act = self.active.pop(slot)
         self.allocator.free_slot(slot)
-        self._free_slots.append(slot)
+        heapq.heappush(self._free_slots, slot)
         self.finished.append(act)
         return act
 
@@ -190,12 +198,22 @@ class SlotScheduler:
         pricing mode's mid-decode ``CacheExhausted`` safety net."""
         act = self.active.pop(slot)
         self.allocator.free_slot(slot)
-        self._free_slots.append(slot)
+        heapq.heappush(self._free_slots, slot)
         act.tokens.clear()
         act.first_token_step = None
         self._pending.appendleft(act.request)
         self.preemptions += 1
         return act
+
+    def steal_newest(self) -> Optional[Request]:
+        """Pop and return the *youngest* queued request (queue tail), or
+        None when nothing is pending.  Fleet rebalancing migrates from
+        the tail on purpose: the remaining queue keeps its FCFS order
+        untouched, and the stolen request — which had the longest wait
+        ahead of it — re-queues at the acceptor with a fresh arrival.
+        Never touches admitted requests, so slot state and generated
+        tokens are unaffected."""
+        return self._pending.pop() if self._pending else None
 
     # -- queries -------------------------------------------------------------------
     def has_work(self) -> bool:

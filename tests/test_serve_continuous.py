@@ -7,9 +7,9 @@ import pytest
 
 from repro.configs import get
 from repro.models import lm
-from repro.serve import (AllocatorInvariantError, BlockAllocator, CacheConfig,
-                         CacheError, CacheExhausted, ContinuousEngine, Engine,
-                         Request, SlotScheduler)
+from repro.serve import (ActiveSlot, AllocatorInvariantError, BlockAllocator,
+                         CacheConfig, CacheError, CacheExhausted,
+                         ContinuousEngine, Engine, Request, SlotScheduler)
 
 
 # =============================================================================
@@ -181,6 +181,65 @@ def test_next_arrival_follows_fcfs_head():
     s.submit(Request(rid=0, prompt=[1], max_new_tokens=1, arrival=1000))
     s.submit(Request(rid=1, prompt=[1], max_new_tokens=1, arrival=5))
     assert s.next_arrival() == 1000
+
+
+def test_is_finished_is_bool_before_first_token():
+    """Regression: with an ``eos_id`` set and no tokens generated yet the
+    predicate's and-chain used to short-circuit on the empty token list
+    and return ``[]`` — truthiness still worked, but ``is False``
+    identity checks (and anything typed on bool) broke."""
+    act = ActiveSlot(request=Request(rid=0, prompt=[1, 2], max_new_tokens=4,
+                                     eos_id=7),
+                     slot=0, admitted_at=0)
+    assert act.is_finished() is False
+    act.tokens.append(3)
+    assert act.is_finished() is False
+    act.tokens.append(7)
+    assert act.is_finished() is True
+
+
+def test_slot_reuse_is_lowest_free_first_under_churn():
+    """Regression: the free-slot list started ascending but turned LIFO
+    after finish/preempt, so the slot an admission landed in depended on
+    completion order.  The lowest free slot must always be reused first —
+    the telemetry's slot -> device mapping (slot % k) is then a
+    deterministic function of the admission sequence."""
+    def run_once():
+        s = _sched(n_slots=3, n_blocks=64)
+        for i in range(8):
+            s.submit(Request(rid=i, prompt=[1, 2], max_new_tokens=2,
+                             arrival=0))
+        s.admit(0)                                   # rids 0,1,2 -> slots 0,1,2
+        slots = {a.request.rid: sl for sl, a in s.active.items()}
+        order = [slots[0], slots[1], slots[2]]
+        # finish out of order: slot 2 first, then slot 0 — a LIFO free
+        # list would hand the next admission slot 0, then slot 2
+        s.finish(slots[2])
+        s.finish(slots[0])
+        for a in s.admit(1):
+            order.append(a.slot)
+        s.finish(order[3])                           # churn again
+        s.preempt(order[4])
+        for a in s.admit(2):
+            order.append(a.slot)
+        return order
+    first = run_once()
+    assert first[:3] == [0, 1, 2]
+    # after freeing {2, 0} the next two admissions take 0 then 2, not 0
+    # after 2 reversed by LIFO
+    assert first[3:5] == [0, 2]
+    assert first == run_once()                       # churn is replayable
+
+
+def test_steal_newest_pops_queue_tail_only():
+    s = _sched(n_slots=1)
+    for i in range(3):
+        s.submit(Request(rid=i, prompt=[1], max_new_tokens=1, arrival=i))
+    stolen = s.steal_newest()
+    assert stolen.rid == 2                           # youngest, not the head
+    assert [r.rid for r in s._pending] == [0, 1]     # FCFS order untouched
+    s.steal_newest(), s.steal_newest()
+    assert s.steal_newest() is None
 
 
 def test_engine_rid_uniqueness():

@@ -1,0 +1,368 @@
+"""Multi-replica router: placement determinism, disaggregated
+prefill/decode block handoff, transfer-buffer invariants, queued-request
+rebalancing — and, above all, token identity: a routed fleet (prefix
+affinity on, disaggregation on where the arch supports it) must emit,
+per request, exactly the tokens single-replica serving emits.  Routing
+and handoff are placement decisions; they may never change compute.
+"""
+
+import random
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get
+from repro.models import lm
+from repro.serve import (BlockTransferBuffer, ContinuousEngine, Engine,
+                         Router)
+
+KV_LEN = 64
+PROMPT_LENS = (5, 9, 13, 33)        # 33 spans two full 16-token blocks
+BUDGETS = (4, 6, 5, 3)
+FAST_ARCHS = ("tinyllama-1.1b", "gemma2-9b", "mixtral-8x7b",
+              "recurrentgemma-2b", "mamba2-370m", "deepseek-v2-lite-16b")
+SLOW_ARCHS = ("command-r-35b", "minicpm-2b")
+FRONTEND_ARCHS = {"seamless-m4t-medium": KV_LEN, "phi-3-vision-4.2b": 56}
+
+_SETUP: dict = {}
+
+
+def _setup(arch):
+    if arch not in _SETUP:
+        kv_len = FRONTEND_ARCHS.get(arch, KV_LEN)
+        cfg = get(arch).reduced()
+        key = jax.random.PRNGKey(0)
+        params = lm.init_params(cfg, key, jnp.float32)
+        prompts = [jax.random.randint(jax.random.fold_in(key, i), (n,), 0,
+                                      cfg.vocab_size)
+                   for i, n in enumerate(PROMPT_LENS)]
+        fes = None
+        if cfg.frontend or cfg.n_enc_layers:
+            fes = [jax.random.normal(
+                jax.random.fold_in(key, 100 + i),
+                (cfg.frontend_tokens, cfg.frontend_dim), jnp.float32)
+                for i in range(len(prompts))]
+        ref = Engine(cfg, params, kv_len=kv_len)
+        expects = [ref.generate(
+            p[None], max_new_tokens=b,
+            frontend_emb=None if fes is None else fes[i][None])[0].tolist()
+            for i, (p, b) in enumerate(zip(prompts, BUDGETS))]
+        _SETUP[arch] = (cfg, params, prompts, fes, expects, kv_len)
+    return _SETUP[arch]
+
+
+def _run_routed_identity(arch):
+    """Route the arch's trace through a 2-replica fleet with
+    disaggregation *requested* for every arch: where blocks are
+    content-transferable the fleet splits prefill from decode and hands
+    blocks over; elsewhere it degrades to co-located replicas and
+    records why.  Tokens must match the per-request oracle either way."""
+    cfg, params, prompts, fes, expects, kv_len = _setup(arch)
+    router = Router.build(cfg, params, n_replicas=2, disaggregate=True,
+                          kv_len=kv_len, n_slots=2, paged=True,
+                          prefill_chunk=8)
+    sharable = lm.prefix_sharable_reason(cfg) is None
+    assert (router.disagg_unsupported_reason is None) == sharable
+    assert [r.role for r in router.replicas] == \
+        (["prefill", "decode"] if sharable else ["mixed", "mixed"])
+    for i, p in enumerate(prompts):
+        router.submit(p, max_new_tokens=BUDGETS[i], rid=i, arrival=i,
+                      frontend_emb=None if fes is None else fes[i])
+    results = router.run()
+    for i in range(len(prompts)):
+        assert results[i] == expects[i], (arch, i)
+    if sharable:
+        # the 33-token prompt carries two full blocks and nothing holds
+        # them downstream yet — it must have gone through the handoff
+        assert router.stats["handoffs"] >= 1, arch
+        assert router.stats["transferred_blocks"] >= 2, arch
+    else:
+        assert router.stats["handoffs"] == 0, arch
+    for rep in router.replicas:
+        rep.engine.allocator.drop_cached()
+        rep.engine.allocator.check_no_leaks()
+        assert rep.engine.allocator.resident_bytes() == 0
+
+
+@pytest.mark.parametrize("arch", FAST_ARCHS)
+def test_routed_fleet_token_identity(arch):
+    _run_routed_identity(arch)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", SLOW_ARCHS)
+def test_routed_fleet_token_identity_slow(arch):
+    _run_routed_identity(arch)
+
+
+@pytest.mark.parametrize("arch", sorted(FRONTEND_ARCHS))
+def test_routed_fleet_token_identity_frontend(arch):
+    _run_routed_identity(arch)
+
+
+def test_arch_lists_cover_registry():
+    """A registry arch added without a router matrix row is silent lost
+    coverage — mirror the engine matrix's completeness guard."""
+    covered = set(FAST_ARCHS) | set(SLOW_ARCHS) | set(FRONTEND_ARCHS) \
+        | {"paper-mlp"}
+    assert set(ARCH_IDS) <= covered, sorted(set(ARCH_IDS) - covered)
+
+
+# =============================================================================
+# placement determinism
+# =============================================================================
+
+def test_equal_scores_route_to_lowest_replica_index():
+    cfg, params, prompts, _, _, kv_len = _setup("paper-mlp")
+    router = Router.build(cfg, params, n_replicas=3, kv_len=kv_len,
+                          n_slots=2, paged=True)
+    router.submit(prompts[0], max_new_tokens=2, rid="a", arrival=0)
+    router.run(max_steps=1)
+    assert router.decisions[0].replica == 0     # 3-way tie -> lowest index
+    router.run()
+
+
+def test_routing_decisions_replay_identically():
+    cfg, params, prompts, _, expects, kv_len = _setup("paper-mlp")
+
+    def once():
+        router = Router.build(cfg, params, n_replicas=3, disaggregate=True,
+                              kv_len=kv_len, n_slots=2)
+        for i, p in enumerate(prompts):
+            router.submit(p, max_new_tokens=BUDGETS[i], rid=i, arrival=i)
+        results = router.run()
+        trace = [(d.rid, d.replica, d.kind, d.hit_tokens, d.queue_depth)
+                 for d in router.decisions]
+        return results, trace
+
+    r1, t1 = once()
+    r2, t2 = once()
+    assert t1 == t2                             # placement is reproducible
+    assert r1 == r2
+    for i in range(len(prompts)):
+        assert r1[i] == expects[i]
+
+
+def test_affinity_routes_repeat_prefix_to_the_holder():
+    """Once a family's blocks are committed on a replica, the prefix-hit
+    term must dominate the score and pull the family's next request to
+    that replica even when another is emptier."""
+    cfg, params, _, _, _, kv_len = _setup("paper-mlp")
+    key = jax.random.PRNGKey(7)
+    shared = jax.random.randint(key, (32,), 0, cfg.vocab_size)
+    p1 = jnp.concatenate([shared, jnp.array([1, 2, 3])])
+    p2 = jnp.concatenate([shared, jnp.array([4, 5, 6, 7])])
+    router = Router.build(cfg, params, n_replicas=2, kv_len=kv_len,
+                          n_slots=2, paged=True, prefix_cache=True)
+    router.submit(p1, max_new_tokens=2, rid="lead", arrival=0)
+    router.run()                                 # blocks now on replica 0
+    lead = next(d for d in router.decisions if d.rid == "lead")
+    assert lead.replica == 0 and lead.hit_tokens == 0
+    router.submit(p2, max_new_tokens=2, rid="follow", arrival=router.now)
+    router.run()
+    follow = next(d for d in router.decisions if d.rid == "follow")
+    assert follow.replica == 0 and follow.hit_tokens == 32
+
+
+# =============================================================================
+# router validation
+# =============================================================================
+
+def test_router_rejects_bad_fleets():
+    cfg, params, _, _, _, kv_len = _setup("paper-mlp")
+    eng = ContinuousEngine(cfg, params, kv_len=kv_len, n_slots=2)
+    with pytest.raises(ValueError):
+        Router([])
+    with pytest.raises(ValueError):
+        Router([eng], roles=["prefill"])         # nobody can decode
+    with pytest.raises(ValueError):
+        Router([eng], roles=["mixed", "mixed"])  # count mismatch
+    with pytest.raises(ValueError):
+        Router([eng], roles=["driver"])          # unknown role
+    other = ContinuousEngine(get("tinyllama-1.1b").reduced(), {},
+                             kv_len=16, n_slots=1)
+    with pytest.raises(ValueError):
+        Router([eng, other])                     # mixed configs
+    with pytest.raises(ValueError):
+        Router.build(cfg, params, n_replicas=1, disaggregate=True,
+                     kv_len=kv_len)
+    # explicit prefill roles on a non-sharable arch are a hard error
+    # (build() degrades gracefully; hand-built fleets must not lie)
+    win = get("gemma2-9b").reduced()
+    wparams = lm.init_params(win, jax.random.PRNGKey(0), jnp.float32)
+    weng = [ContinuousEngine(win, wparams, kv_len=32, n_slots=1, paged=True,
+                             prefill_chunk=8) for _ in range(2)]
+    with pytest.raises(ValueError):
+        Router(weng, roles=["prefill", "decode"])
+
+
+def test_router_rejects_unservable_and_duplicate_requests():
+    cfg, params, prompts, _, _, kv_len = _setup("paper-mlp")
+    router = Router.build(cfg, params, n_replicas=2, kv_len=kv_len,
+                          n_slots=2)
+    router.submit(prompts[0], max_new_tokens=2, rid="a")
+    with pytest.raises(ValueError):
+        router.submit(prompts[0], max_new_tokens=2, rid="a")
+    with pytest.raises(ValueError):
+        router.submit(prompts[0], max_new_tokens=kv_len)   # worst > kv_len
+    with pytest.raises(ValueError):
+        router.submit([], max_new_tokens=1)
+    router.run()
+
+
+# =============================================================================
+# transfer buffer + handoff invariants
+# =============================================================================
+
+def test_transfer_buffer_fifo_capacity_and_chain_prefix():
+    buf = BlockTransferBuffer(capacity_blocks=2)
+    with pytest.raises(ValueError):
+        BlockTransferBuffer(capacity_blocks=-1)
+    buf.put("h1", "p1")
+    buf.put("h2", "p2")
+    buf.put("h3", "p3")                          # FIFO-drops h1
+    assert len(buf) == 2 and buf.stats["dropped"] == 1
+    # chain delivery stops at the first missing hash: h1 was dropped, so
+    # a chain keyed from h1 delivers nothing — degradation, not holes
+    assert buf.take_chain(["h1", "h2", "h3"]) == []
+    assert buf.take_chain(["h2", "h3"]) == [("h2", "p2"), ("h3", "p3")]
+    assert len(buf) == 0 and buf.stats["delivered"] == 2
+    buf.put("h4", "old")
+    buf.put("h4", "new")                         # re-stage replaces payload
+    assert buf.take_chain(["h4"]) == [("h4", "new")]
+
+
+def test_randomized_handoffs_keep_both_pools_audited():
+    """Randomized prefill -> decode handoffs: after every export/import
+    the source and destination allocators must pass their full
+    ``check()`` audit, imported blocks must land as refcount-0 cached
+    entries, and a follow-up admission must treat the injected chain as
+    an ordinary full prefix hit."""
+    cfg, params, _, _, _, kv_len = _setup("paper-mlp")
+    key = jax.random.PRNGKey(3)
+    src = ContinuousEngine(cfg, params, kv_len=kv_len, n_slots=2,
+                           paged=True, prefill_chunk=8, prefix_cache=True)
+    dst = ContinuousEngine(cfg, params, kv_len=kv_len, n_slots=2,
+                           paged=True, prefill_chunk=8, prefix_cache=True)
+    buf = BlockTransferBuffer()
+    rng = random.Random(0)
+    chains = []
+    for f in range(3):
+        n = rng.choice((17, 33, 48))             # 1..3 full 16-token blocks
+        prompt = jax.random.randint(jax.random.fold_in(key, f), (n,), 0,
+                                    cfg.vocab_size)
+        src.submit(prompt, max_new_tokens=1, rid=f"lead{f}")
+        out = src.run()
+        assert len(out[f"lead{f}"]) == 1
+        hashes = lm.prompt_block_hashes(prompt, src.block_size)
+        chains.append((prompt, hashes))
+        entries = src.export_prefix_blocks(hashes)
+        assert [h for h, _ in entries] == list(hashes)
+        buf.put_chain(entries)
+        src.allocator.check()
+    rng.shuffle(chains)
+    for i, (prompt, hashes) in enumerate(chains):
+        n = dst.import_prefix_blocks(buf.take_chain(hashes))
+        assert n == len(hashes)
+        dst.allocator.check()                    # full invariant audit
+        for h in hashes:
+            assert dst.allocator.lookup_block(h) is not None
+        assert dst.allocator.match_tokens(hashes) == \
+            len(hashes) * dst.block_size
+        # the injected chain must now serve as a plain full prefix hit
+        dst.submit(prompt, max_new_tokens=2, rid=f"tail{i}")
+        out = dst.run()
+        ref = Engine(cfg, params, kv_len=kv_len).generate(
+            prompt[None], max_new_tokens=2)[0].tolist()
+        assert out[f"tail{i}"] == ref
+        dst.allocator.check()
+    assert dst.telemetry.prefix_hit_rate() > 0
+    for eng in (src, dst):
+        eng.allocator.drop_cached()
+        eng.allocator.check_no_leaks()
+
+
+def test_import_into_exhausted_pool_degrades_not_corrupts():
+    """When the destination pool cannot hold the chain, the import takes
+    what fits (a prefix, possibly nothing) and the pool stays audited —
+    the request simply recomputes; nothing may corrupt or leak."""
+    cfg, params, _, _, _, kv_len = _setup("paper-mlp")
+    key = jax.random.PRNGKey(5)
+    src = ContinuousEngine(cfg, params, kv_len=kv_len, n_slots=2,
+                           paged=True, prefill_chunk=8, prefix_cache=True)
+    # destination sized to 4 blocks total
+    dst = ContinuousEngine(cfg, params, kv_len=kv_len, n_slots=1,
+                           paged=True, prefix_cache=True, cache_blocks=4)
+    prompt = jax.random.randint(key, (48,), 0, cfg.vocab_size)
+    src.submit(prompt, max_new_tokens=1, rid="lead")
+    src.run()
+    hashes = lm.prompt_block_hashes(prompt, src.block_size)
+    entries = src.export_prefix_blocks(hashes)
+    # occupy the destination with a live request so the chain can't fit
+    busy = jax.random.randint(jax.random.fold_in(key, 1), (33,), 0,
+                              cfg.vocab_size)
+    dst.submit(busy, max_new_tokens=8, rid="busy", arrival=0)
+    dst.run(max_steps=2)                         # admitted, still decoding
+    n = dst.import_prefix_blocks(entries)
+    assert 0 <= n < len(hashes)                  # partial (or empty) prefix
+    dst.allocator.check()
+    dst.run()                                    # busy request completes
+    dst.allocator.drop_cached()
+    dst.allocator.check_no_leaks()
+
+
+# =============================================================================
+# fleet rebalancing + adaptation
+# =============================================================================
+
+def test_rebalance_migrates_only_queued_requests():
+    cfg, params, _, _, _, kv_len = _setup("paper-mlp")
+    key = jax.random.PRNGKey(11)
+    router = Router.build(cfg, params, n_replicas=2, kv_len=kv_len,
+                          n_slots=1)
+    prompts = [jax.random.randint(jax.random.fold_in(key, i), (6,), 0,
+                                  cfg.vocab_size) for i in range(5)]
+    expects = [Engine(cfg, params, kv_len=kv_len).generate(
+        p[None], max_new_tokens=3)[0].tolist() for p in prompts]
+    # pile everything onto replica 0 behind the router's back: 1 admitted
+    # (slot) + 4 queued
+    eng0 = router.replicas[0].engine
+    for i, p in enumerate(prompts):
+        eng0.submit(p, max_new_tokens=3, rid=i, arrival=0)
+    eng0.run(max_steps=1)                        # request 0 holds the slot
+    assert eng0.scheduler.n_pending() == 4
+    moved = router.rebalance()
+    # loads were 5 vs 0; migration stops once the gap closes below 2
+    assert [m.rid for m in moved] == [4, 3]      # youngest first, from tail
+    assert all(m.src == 0 and m.dst == 1 for m in moved)
+    assert eng0.scheduler.n_pending() == 2       # FCFS head untouched
+    assert [r.rid for r in eng0.scheduler._pending] == [1, 2]
+    assert router.rebalance() == []              # already balanced
+    results = router.run()
+    for i in range(5):
+        assert results[i] == expects[i]          # migration is invisible
+    for rep in router.replicas:
+        rep.engine.allocator.check_no_leaks()
+
+
+def test_fleet_adaptation_runs_over_lead_plan():
+    from repro.core import Topology, compile_plan
+    cfg, params, prompts, _, _, kv_len = _setup("paper-mlp")
+    plan = compile_plan(cfg, ContinuousEngine.decode_shape_for(kv_len, 2),
+                        Topology.homogeneous(4))
+    router = Router.build(cfg, params, n_replicas=2, kv_len=kv_len,
+                          n_slots=2, paged=True, plans=plan)
+    for i, p in enumerate(prompts):
+        router.submit(p, max_new_tokens=BUDGETS[i], rid=i, arrival=i)
+    router.run()
+    out = router.adapt()
+    assert out.trace is not None and out.plan is not None
+    assert out.plan.k == plan.k
+    fs = router.fleet_stats()
+    assert fs["total_tokens"] == sum(BUDGETS)
+    assert 0.0 <= fs["occupancy"] <= 1.0
+    interference = router.telemetry.device_interference(plan.k)
+    assert len(interference) == plan.k
+    assert all(set(d) == {"compute", "memory", "network"} and
+               all(v >= 1.0 for v in d.values()) for d in interference)

@@ -32,6 +32,38 @@ def test_occupancy_and_pressure_aggregates():
     assert tel.tokens_per_sec() == pytest.approx(2000.0)
 
 
+def test_occupancy_guarded_when_every_step_has_zero_slots():
+    """Regression: ``occupancy()`` fed ``statistics.mean`` an empty list
+    (``StatisticsError``) when every recent step recorded ``n_slots ==
+    0`` — the filter ran per-step but nothing guarded the empty result,
+    unlike ``cache_pressure``'s same-shaped guard."""
+    tel = ServeTelemetry(window=4)
+    for i in range(6):
+        _record(tel, i, active=(), n_slots=0)
+    assert tel.occupancy() == 0.0
+    # a mixed window still averages only the slot-bearing steps
+    _record(tel, 6, active=(0,), n_slots=2)
+    assert tel.occupancy() == pytest.approx(0.5)
+
+
+def test_decode_starvation_counts_lanes_sharing_prefill_steps():
+    """The router benchmark's gated quantity: a running total of decode
+    lanes resident on steps that also carried prefill work — it must
+    survive history-window eviction and reset with ``reset()``."""
+    tel = ServeTelemetry(window=2)
+    tel.record_step(step=0, seconds=1e-3, active_slots=(0, 1), n_slots=4,
+                    blocks_in_use=1, n_blocks=16, prefills=1)
+    tel.record_step(step=1, seconds=1e-3, active_slots=(0, 1, 2), n_slots=4,
+                    blocks_in_use=1, n_blocks=16, prefill_chunks=2)
+    tel.record_step(step=2, seconds=1e-3, active_slots=(0,), n_slots=4,
+                    blocks_in_use=1, n_blocks=16)       # pure decode: free
+    tel.record_step(step=3, seconds=1e-3, active_slots=(), n_slots=4,
+                    blocks_in_use=1, n_blocks=16, prefills=1)  # no lanes
+    assert tel.decode_starvation() == 5        # 2 + 3, despite window=2
+    tel.reset()
+    assert tel.decode_starvation() == 0
+
+
 def test_device_interference_maps_slots_round_robin():
     tel = ServeTelemetry(window=10, alpha=1.0, beta=1.0)
     # slots 0 and 2 always active -> devices 0 and 2 loaded (k=4, 1 slot/dev)
